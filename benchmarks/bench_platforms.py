@@ -1,0 +1,66 @@
+"""Table 5 analog: platform comparison (speedup over the software loop).
+
+The paper compares its FPGA (138 ns/sample) against Python on three
+hosts (435 ms, 39.2 ms, 23.1 ms *per sample*). We reproduce the
+comparison shape on this host: the plain Python loop is the software
+baseline, and each accelerated form gets a speedup column. The TPU
+kernel's projected row uses the roofline bound from the dry-run machinery
+(VPU-limited streaming, see EXPERIMENTS.md §Perf/TEDA) since no TPU is
+attached here.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scan import teda_scan
+from repro.core.teda import teda_numpy_loop, teda_stream
+
+
+def run(t_len: int = 8192):
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(t_len, 2)).astype(np.float32)
+    xj = jnp.asarray(x)
+
+    t0 = time.perf_counter()
+    teda_numpy_loop(x, 3.0)
+    base = time.perf_counter() - t0
+
+    rows = [("python_loop", base, 1.0)]
+    for name, fn in [
+        ("jax_lax_scan", jax.jit(lambda v: teda_stream(v, 3.0)[1].ecc)),
+        ("jax_assoc_scan", jax.jit(lambda v: teda_scan(v, 3.0)[1].ecc)),
+    ]:
+        jax.block_until_ready(fn(xj))  # compile
+        ts = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(xj))
+            ts.append(time.perf_counter() - t0)
+        w = float(np.median(ts))
+        rows.append((name, w, base / w))
+
+    # projected TPU row: C channels * 8 sublanes retire per VPU cycle at
+    # ~940 MHz; TEDA is ~40 flops/sample -> VPU-bound estimate. Kept
+    # clearly labeled as a projection, not a measurement.
+    vpu_lanes = 8 * 128
+    cycles_per_sample = 40 / 4  # ~4 f32 ALUs deep per lane-cycle
+    proj = cycles_per_sample / (vpu_lanes * 0.94e9) * t_len
+    rows.append(("tpu_v5e_projected", proj, base / proj))
+    return [{"name": n, "wall_s": w, "speedup_vs_python": s,
+             "per_sample_ns": w / t_len * 1e9} for n, w, s in rows]
+
+
+def main():
+    print("name,us_per_call,derived")
+    for r in run():
+        print(f"platforms/{r['name']},{r['wall_s'] * 1e6:.1f},"
+              f"speedup={r['speedup_vs_python']:.1f}x|"
+              f"{r['per_sample_ns']:.1f}ns_per_sample")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Table 4 analog: TEDA processing time / throughput (samples per second).
+
+The paper reports t_c = 138 ns, initial delay 3*t_c, throughput 7.2 MSPS
+for the FPGA pipeline. We report, on this host:
+
+  * python_loop      — the paper's software baseline (Table 5 row 1)
+  * lax_scan         — paper-faithful recurrence (the pipeline analog)
+  * associative_scan — beyond-paper parallel form (core/scan.py)
+  * pallas_interpret — the TPU kernel executed in interpret mode
+                       (functional on CPU; its real target is TPU)
+
+Each row: wall time per call, ns per sample, throughput in MSPS, plus the
+"initial delay" analog = jit compile time. Batched-channel rows show the
+throughput scaling the paper gets from replicating TEDA modules
+("multiple TEDA modules in parallel", paper §5.2.1).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scan import teda_scan
+from repro.core.teda import teda_numpy_loop, teda_stream
+from repro.kernels.ops import teda_scan_tpu
+
+
+def _time(fn, *args, reps=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def run(t_len: int = 16384, channels: int = 128, reps: int = 5):
+    rng = np.random.default_rng(0)
+    x_mv = jnp.asarray(rng.normal(size=(t_len, 2)).astype(np.float32))
+    x_ch = jnp.asarray(
+        rng.normal(size=(t_len, channels)).astype(np.float32))
+    rows = []
+
+    # python loop (samples = t_len) — the software platform
+    small = np.asarray(x_mv[:2048])
+    t0 = time.perf_counter()
+    teda_numpy_loop(small, 3.0)
+    t_loop = (time.perf_counter() - t0) / 2048 * t_len
+    rows.append(("python_loop", t_loop, t_len, 0.0))
+
+    # paper-faithful lax.scan
+    f_scan = jax.jit(lambda v: teda_stream(v, 3.0)[1].ecc)
+    tc0 = time.perf_counter()
+    jax.block_until_ready(f_scan(x_mv))
+    delay_scan = time.perf_counter() - tc0
+    rows.append(("lax_scan", _time(f_scan, x_mv, reps=reps), t_len,
+                 delay_scan))
+
+    # beyond-paper associative scan
+    f_assoc = jax.jit(lambda v: teda_scan(v, 3.0)[1].ecc)
+    tc0 = time.perf_counter()
+    jax.block_until_ready(f_assoc(x_mv))
+    delay_assoc = time.perf_counter() - tc0
+    rows.append(("assoc_scan", _time(f_assoc, x_mv, reps=reps), t_len,
+                 delay_assoc))
+
+    # multichannel (the "parallel TEDA modules" scaling row)
+    f_assoc_ch = jax.jit(
+        lambda v: teda_scan(v[..., None], 3.0)[1].ecc)
+    jax.block_until_ready(f_assoc_ch(x_ch))
+    rows.append((f"assoc_scan_x{channels}ch",
+                 _time(f_assoc_ch, x_ch, reps=reps),
+                 t_len * channels, 0.0))
+
+    # pallas kernel (interpret mode on CPU)
+    f_pallas = lambda v: teda_scan_tpu(v, 3.0, block_t=512)[1]["ecc"]
+    jax.block_until_ready(f_pallas(x_ch))
+    rows.append((f"pallas_interpret_x{channels}ch",
+                 _time(f_pallas, x_ch, reps=max(2, reps // 2)),
+                 t_len * channels, 0.0))
+
+    out = []
+    for name, wall, samples, delay in rows:
+        ns_per = wall / samples * 1e9
+        msps = samples / wall / 1e6
+        out.append({
+            "name": name, "wall_s": wall, "samples": samples,
+            "ns_per_sample": ns_per, "throughput_msps": msps,
+            "initial_delay_s": delay,
+        })
+    return out
+
+
+def main():
+    print("name,us_per_call,derived")
+    for r in run():
+        print(f"throughput/{r['name']},{r['wall_s'] * 1e6:.1f},"
+              f"{r['throughput_msps']:.3f}MSPS|"
+              f"{r['ns_per_sample']:.1f}ns_per_sample|"
+              f"delay={r['initial_delay_s']:.3f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Inject the generated §Roofline table into EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m benchmarks.finalize_experiments
+"""
+from __future__ import annotations
+
+import re
+
+from benchmarks.roofline import load, markdown
+
+MARK = "<!-- ROOFLINE_TABLE -->"
+
+
+def main():
+    rows = load("experiments/dryrun")
+    if not rows:
+        raise SystemExit("no dry-run results")
+    n_ok = sum(1 for r in rows if not r.get("skipped"))
+    n_skip = sum(1 for r in rows if r.get("skipped"))
+    single = markdown(rows, "single")
+    multi = markdown(rows, "multi")
+    block = (f"{MARK}\n\n"
+             f"Cells compiled: {n_ok} (+{n_skip} recorded skips). "
+             f"`acc` = gradient-accumulation microbatches; `temp` from "
+             f"`memory_analysis()` (per-device, must fit 16 GB with "
+             f"args); `6ND/HLO` = useful-flop ratio.\n\n"
+             f"### Single pod (16x16 = 256 chips)\n\n{single}\n\n"
+             f"### Multi-pod (2x16x16 = 512 chips)\n\n{multi}\n")
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    pattern = re.compile(
+        re.escape(MARK) + r".*?(?=\n## )", re.DOTALL)
+    if pattern.search(text):
+        text = pattern.sub(block + "\n", text)
+    else:
+        text = text.replace(MARK, block)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print(f"injected {n_ok} cells (+{n_skip} skips)")
+
+
+if __name__ == "__main__":
+    main()

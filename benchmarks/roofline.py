@@ -1,0 +1,85 @@
+"""Assemble the §Roofline table from cached dry-run JSONs.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+Prints a markdown table (used verbatim in EXPERIMENTS.md) and a CSV.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dir_: str):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(p) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b / 2 ** 30:.2f}"
+
+
+def markdown(rows, mesh="single"):
+    out = ["| arch | shape | acc | temp GiB/dev | compute s | memory s | "
+           "collective s | bound | roofline frac | 6ND/HLO |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("skipped"):
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | - | - "
+                       f"| SKIP | - | - |")
+            continue
+        t = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('accum_steps', 1)} "
+            f"| {fmt_bytes(r['memory']['temp_bytes'])} "
+            f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+            f"| {t['collective_s']:.4f} | {t['bottleneck']} "
+            f"| {t['roofline_fraction']:.3f} "
+            f"| {r['useful_flop_ratio']:.2f} |")
+    return "\n".join(out)
+
+
+def csv(rows):
+    out = ["arch,shape,mesh,devices,compute_s,memory_s,collective_s,"
+           "bottleneck,roofline_fraction,useful_flop_ratio,temp_bytes"]
+    for r in rows:
+        if r.get("skipped"):
+            out.append(f"{r['arch']},{r['shape']},{r['mesh']},,,,,SKIP,,,")
+            continue
+        t = r["roofline"]
+        out.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},{r['devices']},"
+            f"{t['compute_s']:.6f},{t['memory_s']:.6f},"
+            f"{t['collective_s']:.6f},{t['bottleneck']},"
+            f"{t['roofline_fraction']:.4f},{r['useful_flop_ratio']:.3f},"
+            f"{r['memory']['temp_bytes']}")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--format", default="markdown",
+                    choices=["markdown", "csv"])
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    if not rows:
+        print("no dry-run results yet; run python -m repro.launch.dryrun")
+        return
+    if args.format == "markdown":
+        print(markdown(rows, args.mesh))
+    else:
+        print(csv(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Benchmark harness: one function per paper table.
+
+Prints ``name,us_per_call,derived`` CSV. Tables:
+  Table 2 / Figs 6-7  -> bench_detection  (fault detection validation)
+  Table 3             -> bench_occupation (graph/VMEM occupation)
+  Table 4             -> bench_throughput (processing time / SPS)
+  Table 5             -> bench_platforms  (speedup vs software loop)
+
+The roofline/dry-run tables (EXPERIMENTS.md §Roofline) are produced by
+``python -m repro.launch.dryrun`` + ``benchmarks/roofline.py`` (they need
+the 512-device environment and are cached under experiments/).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_detection, bench_occupation,
+                            bench_platforms, bench_throughput)
+    failed = []
+    for mod in (bench_detection, bench_occupation, bench_throughput,
+                bench_platforms):
+        try:
+            mod.main()
+            sys.stdout.flush()
+        except Exception:
+            failed.append(mod.__name__)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == '__main__':
+    main()

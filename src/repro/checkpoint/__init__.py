@@ -1,0 +1,2 @@
+"""Checkpointing."""
+from repro.checkpoint.manager import CheckpointManager

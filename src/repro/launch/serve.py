@@ -1,0 +1,100 @@
+"""Batched serving driver with TEDA decode-stream monitoring.
+
+Serves a (reduced or full) LM: prefills a prompt batch, then decodes with
+the KV-cache path while a multichannel TEDA state watches per-request
+telemetry (logit entropy, max-logit) — flagged requests are surfaced the
+way a production gateway would quarantine degenerate generations
+(repetition collapse, NaN logits, prompt-injection-style OOD inputs).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b \
+        --scale tiny --batch 4 --prompt-len 32 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core import TedaState, teda_init, teda_step
+from repro.models import (init_cache, init_lm_params, lm_decode_step,
+                          lm_forward)
+
+
+def serve(cfg, batch: int, prompt_len: int, gen: int, m: float = 3.5,
+          seed: int = 0, greedy: bool = True):
+    assert cfg.family != "encdec", "serve example targets decoder-only LMs"
+    key = jax.random.PRNGKey(seed)
+    params = init_lm_params(key, cfg)
+    prompts = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab)
+
+    max_seq = prompt_len + gen
+    caches = init_cache(cfg, batch, max_seq, dtype=jnp.float32)
+    decode = jax.jit(
+        lambda p, t, pos, c: lm_decode_step(p, t, pos, c, cfg),
+        donate_argnums=(3,))
+
+    # prefill by teacher-forcing the prompt through the decode path
+    # (keeps one compiled program; a production server would lower a
+    # separate chunked-prefill program as in launch/specs.py)
+    tok = prompts[:, 0]
+    t0 = time.perf_counter()
+    for i in range(prompt_len - 1):
+        logits, caches = decode(params, prompts[:, i], jnp.int32(i), caches)
+    prefill_s = time.perf_counter() - t0
+
+    # TEDA monitor: 2 channels (entropy, max-logit) per request
+    teda = teda_init((batch, 2), 1)
+    flagged = np.zeros(batch, bool)
+    outs = []
+    tok = prompts[:, -1]
+    t0 = time.perf_counter()
+    for step in range(gen):
+        pos = jnp.int32(prompt_len - 1 + step)
+        logits, caches = decode(params, tok, pos, caches)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ent = -jnp.sum(jnp.exp(logp) * logp, axis=-1)  # (B,)
+        mx = jnp.max(logits, axis=-1)
+        metrics = jnp.stack([ent, mx], axis=-1)[..., None]  # (B, 2, 1)
+        teda, verdict = teda_step(teda, metrics, m)
+        flagged |= np.asarray(verdict.outlier).any(axis=-1)
+        tok = (jnp.argmax(logits, axis=-1) if greedy else
+               jax.random.categorical(jax.random.fold_in(key, step),
+                                      logits))
+        outs.append(np.asarray(tok))
+    decode_s = time.perf_counter() - t0
+
+    toks_out = np.stack(outs, axis=1)
+    return {
+        "tokens": toks_out,
+        "flagged_requests": np.flatnonzero(flagged).tolist(),
+        "prefill_tok_s": batch * (prompt_len - 1) / prefill_s,
+        "decode_tok_s": batch * gen / decode_s,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--scale", default="tiny", choices=["tiny", "full"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.scale == "tiny":
+        cfg = cfg.reduced()
+    res = serve(cfg, args.batch, args.prompt_len, args.gen)
+    print(f"[serve] prefill {res['prefill_tok_s']:.1f} tok/s, "
+          f"decode {res['decode_tok_s']:.1f} tok/s")
+    print(f"[serve] TEDA-flagged requests: {res['flagged_requests']}")
+    print(f"[serve] sample continuation (req 0): "
+          f"{res['tokens'][0][:16].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,294 @@
+"""Step functions + ShapeDtypeStruct input specs for every (arch, shape).
+
+Everything here is allocation-free: parameters, optimizer state, caches
+and batches are jax.ShapeDtypeStruct trees (via jax.eval_shape), and the
+matching NamedShardings come from repro.sharding.rules. The dry-run
+lowers these directly; train.py/serve.py reuse the same builders with
+real arrays.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ShapeSpec, get_config
+from repro.core.guard import GuardConfig, guard_init, guard_step
+from repro.models import (build_cross_cache, encdec_decode_step, encdec_loss,
+                          init_cache, init_encdec_cache, init_encdec_params,
+                          init_lm_params, lm_decode_step, lm_loss, lm_prefill)
+from repro.models.common import ModelConfig
+from repro.optim import adamw
+from repro.sharding.rules import (batch_spec, dp_axes, params_shardings,
+                                  state_cache_shardings)
+
+GUARD_CFG = GuardConfig(m=3.0, warmup_steps=50, channels=2)
+
+
+class CellSpec(NamedTuple):
+    """Everything needed to lower one (arch x shape x mesh) cell."""
+    fn: Callable                  # jit-able step function
+    args: Tuple[Any, ...]         # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    token_count: int              # D for 6ND bookkeeping
+
+
+# ------------------------------------------------------------ builders --
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    accum_steps: int = 1, unroll_accum: bool = False,
+                    guard_cfg: GuardConfig = GUARD_CFG,
+                    micro_shardings=None):
+    """Train step with optional gradient accumulation (microbatching).
+
+    Accumulation is THE activation-memory lever at 4k-seq/256-batch
+    scale: live activations scale with the microbatch, grads accumulate
+    into an FSDP-sharded f32 tree. `unroll_accum` replaces the microbatch
+    lax.scan with a Python loop for the dry-run flop calibration (HLO
+    cost analysis counts loop bodies once).
+    """
+    loss_fn = encdec_loss if cfg.family == "encdec" else lm_loss
+
+    def micro_grads(params, micro):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, micro, cfg)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, guard_state, batch):
+        if accum_steps == 1:
+            loss, metrics, grads = micro_grads(params, batch)
+        else:
+            k = accum_steps
+            micros = jax.tree_util.tree_map(
+                lambda a: a.reshape((k, a.shape[0] // k) + a.shape[1:]),
+                batch)
+            if micro_shardings is not None:
+                # the reshape would otherwise drop the batch sharding and
+                # replicate each microbatch onto every device
+                micros = jax.tree_util.tree_map(
+                    jax.lax.with_sharding_constraint, micros,
+                    micro_shardings)
+            acc_dt = jnp.dtype(opt_cfg.grad_dtype)
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+
+            def one(carry, micro):
+                gacc, lacc = carry
+                loss, metrics, grads = micro_grads(params, micro)
+                gacc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(a.dtype), gacc, grads)
+                return (gacc, lacc + loss), metrics
+
+            if unroll_accum:
+                carry = (g0, jnp.zeros(()))
+                ms = []
+                for i in range(k):
+                    micro = jax.tree_util.tree_map(lambda a: a[i], micros)
+                    carry, m = one(carry, micro)
+                    ms.append(m)
+                metrics = jax.tree_util.tree_map(
+                    lambda *a: jnp.stack(a).mean(), *ms)
+            else:
+                carry, metrics = jax.lax.scan(
+                    one, (g0, jnp.zeros(())), micros)
+                metrics = jax.tree_util.tree_map(jnp.mean, metrics)
+            (gacc, lsum) = carry
+            grads = jax.tree_util.tree_map(lambda g: g / k, gacc)
+            loss = lsum / k
+        gnorm = adamw.global_norm(grads)
+        # TEDA guard on (loss, grad-norm) telemetry — the paper's
+        # detector deciding whether this step may touch the weights
+        guard_state, verdict = guard_step(
+            guard_state, jnp.stack([loss, gnorm]), guard_cfg)
+        params, opt_state, om = adamw.update(
+            grads, opt_state, params, opt_cfg, skip=verdict.skip)
+        metrics = dict(metrics, loss=loss, **om)
+        return params, opt_state, guard_state, metrics
+
+    return train_step
+
+
+def pick_accum_steps(mesh: Mesh, global_batch: int, seq_len: int,
+                     d_model: int = 2048,
+                     token_dim_budget: int = 8192 * 2048) -> int:
+    """Smallest divisor k of the per-dp-shard batch such that each
+    microbatch holds <= budget token-dims (tokens x d_model) per
+    data-parallel shard — activation memory scales with that product."""
+    import numpy as np
+    target_tokens_per_row = max(1024, token_dim_budget // max(d_model, 1))
+    sizes = dict(mesh.shape)
+    dp_total = 1
+    for a in ("pod", "data"):
+        dp_total *= sizes.get(a, 1)
+    if global_batch % dp_total:
+        dp_total = sizes.get("data", 1)
+    per_row = max(global_batch // max(dp_total, 1), 1)
+    tokens_row = per_row * seq_len
+    k0 = max(1, -(-tokens_row // target_tokens_per_row))
+    for k in range(k0, per_row + 1):
+        if per_row % k == 0:
+            return k
+    return per_row
+
+
+def _param_template(cfg: ModelConfig):
+    init = init_encdec_params if cfg.family == "encdec" else init_lm_params
+    return jax.eval_shape(lambda k: init(k, cfg), jax.random.PRNGKey(0))
+
+
+def _batch_template(cfg: ModelConfig, sp: ShapeSpec, per_pod_batch: int):
+    b, s = per_pod_batch, sp.seq_len
+    if cfg.family == "encdec":
+        return {
+            "src_emb": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                            jnp.float32),
+            "tokens": jax.ShapeDtypeStruct((b, s + 1), jnp.int32),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((b, s + 1), jnp.int32)}
+
+
+def _batch_shardings(mesh: Mesh, cfg: ModelConfig, batch_tpl):
+    bspec = batch_spec(mesh, batch_tpl["tokens"].shape[0])
+    out = {"tokens": NamedSharding(mesh, bspec)}
+    if "src_emb" in batch_tpl:
+        out["src_emb"] = NamedSharding(
+            mesh, P(*(tuple(bspec)[:1] + (None, None))))
+    return out
+
+
+def build_train_cell(arch: str, sp: ShapeSpec, mesh: Mesh,
+                     cfg: ModelConfig | None = None,
+                     accum_steps: int | None = None,
+                     unroll_accum: bool = False,
+                     opt_cfg: adamw.AdamWConfig | None = None) -> CellSpec:
+    cfg = cfg or get_config(arch)
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    if accum_steps is None:
+        accum_steps = pick_accum_steps(mesh, sp.global_batch, sp.seq_len,
+                                       cfg.d_model)
+    micro_sh = None
+    if accum_steps > 1:
+        bspec = batch_spec(mesh, sp.global_batch // accum_steps)
+        micro_sh = {"tokens": NamedSharding(
+            mesh, P(*((None,) + tuple(bspec))))}
+        if cfg.family == "encdec":
+            micro_sh["src_emb"] = NamedSharding(
+                mesh, P(None, tuple(bspec)[0], None, None))
+    step = make_train_step(cfg, opt_cfg, accum_steps, unroll_accum,
+                           micro_shardings=micro_sh)
+
+    params = _param_template(cfg)
+    opt = jax.eval_shape(lambda p: adamw.init(p, opt_cfg), params)
+    guard = jax.eval_shape(lambda: guard_init(GUARD_CFG))
+    batch = _batch_template(cfg, sp, sp.global_batch)
+
+    p_sh = params_shardings(mesh, params)
+    o_sh = adamw.OptState(m=p_sh, v=p_sh,
+                          count=NamedSharding(mesh, P()))
+    g_sh = jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), guard)
+    b_sh = _batch_shardings(mesh, cfg, batch)
+    rep = NamedSharding(mesh, P())
+    m_sh = {"ce": rep, "aux": rep, "ppl_proxy": rep, "loss": rep,
+            "grad_norm": rep, "lr": rep, "skipped": rep}
+
+    tokens = batch["tokens"].shape[0] * sp.seq_len
+    if cfg.family == "encdec":
+        tokens *= 2  # encoder + decoder sides
+    return CellSpec(
+        fn=step, args=(params, opt, guard, batch),
+        in_shardings=(p_sh, o_sh, g_sh, b_sh),
+        out_shardings=(p_sh, o_sh, g_sh, m_sh),
+        donate_argnums=(0, 1, 2),
+        token_count=tokens,
+    )
+
+
+def build_prefill_cell(arch: str, sp: ShapeSpec, mesh: Mesh,
+                       cfg: ModelConfig | None = None) -> CellSpec:
+    cfg = cfg or get_config(arch)
+    params = _param_template(cfg)
+    b = sp.global_batch
+
+    if cfg.family == "encdec":
+        def prefill(params, batch):
+            from repro.models import decode_train, encode
+            from repro.models.layers import unembed
+            enc = encode(params, batch["src_emb"], cfg)
+            hid = decode_train(params, enc, batch["tokens"][:, :-1], cfg,
+                               return_hidden=True)
+            return unembed(params["embed"], hid[:, -1], cfg.vocab)
+        batch = _batch_template(cfg, sp, b)
+        b_sh = _batch_shardings(mesh, cfg, batch)
+        args = (params, batch)
+        in_sh = (params_shardings(mesh, params), b_sh)
+    else:
+        def prefill(params, tokens):
+            return lm_prefill(params, tokens, cfg)
+        tokens = jax.ShapeDtypeStruct((b, sp.seq_len), jnp.int32)
+        args = (params, tokens)
+        in_sh = (params_shardings(mesh, params),
+                 NamedSharding(mesh, batch_spec(mesh, b)))
+
+    return CellSpec(fn=prefill, args=args, in_shardings=in_sh,
+                    out_shardings=None, donate_argnums=(),
+                    token_count=b * sp.seq_len * (
+                        2 if cfg.family == "encdec" else 1))
+
+
+def build_decode_cell(arch: str, sp: ShapeSpec, mesh: Mesh,
+                      cfg: ModelConfig | None = None) -> CellSpec:
+    cfg = cfg or get_config(arch)
+    params = _param_template(cfg)
+    b, s = sp.global_batch, sp.seq_len
+
+    kvd = jnp.dtype(cfg.kv_dtype)
+    if cfg.family == "encdec":
+        caches = jax.eval_shape(
+            functools.partial(init_encdec_cache, cfg, b, s, s,
+                              dtype=kvd))
+
+        def step(params, token, pos, caches):
+            return encdec_decode_step(params, token, pos, caches, cfg)
+    else:
+        caches = jax.eval_shape(
+            functools.partial(init_cache, cfg, b, s, dtype=kvd))
+
+        def step(params, token, pos, caches):
+            return lm_decode_step(params, token, pos, caches, cfg)
+
+    token = jax.ShapeDtypeStruct((b,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    p_sh = params_shardings(mesh, params)
+    c_sh = state_cache_shardings(mesh, caches)
+    bspec = batch_spec(mesh, b, kind="decode")
+    t_sh = NamedSharding(mesh, bspec)
+    b_dim = tuple(bspec)[0] if len(tuple(bspec)) else None
+    v_dim = "model" if cfg.vocab % dict(mesh.shape)["model"] == 0 else None
+    logits_sh = NamedSharding(mesh, P(b_dim, v_dim))
+    return CellSpec(
+        fn=step, args=(params, token, pos, caches),
+        in_shardings=(p_sh, t_sh, NamedSharding(mesh, P()), c_sh),
+        out_shardings=(logits_sh, c_sh),
+        donate_argnums=(3,),
+        token_count=b,
+    )
+
+
+def build_cell(arch: str, sp: ShapeSpec, mesh: Mesh,
+               cfg: ModelConfig | None = None,
+               accum_steps: int | None = None,
+               unroll_accum: bool = False,
+               opt_cfg: adamw.AdamWConfig | None = None) -> CellSpec:
+    if sp.kind == "train":
+        return build_train_cell(arch, sp, mesh, cfg, accum_steps,
+                                unroll_accum, opt_cfg)
+    if sp.kind == "prefill":
+        return build_prefill_cell(arch, sp, mesh, cfg)
+    if sp.kind == "decode":
+        return build_decode_cell(arch, sp, mesh, cfg)
+    raise ValueError(sp.kind)

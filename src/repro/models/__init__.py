@@ -1,0 +1,16 @@
+"""Model zoo substrate for the 10 assigned architectures."""
+from repro.models.common import ModelConfig, active_param_count, param_count
+from repro.models.transformer import (block_layout, chunked_ce, init_cache,
+                                      init_lm_params, lm_backbone,
+                                      lm_decode_step, lm_forward, lm_logits,
+                                      lm_loss, lm_prefill)
+from repro.models.encdec import (build_cross_cache, decode_train,
+                                 encdec_decode_step, encdec_loss, encode,
+                                 init_encdec_cache, init_encdec_params)
+
+__all__ = [
+    "ModelConfig", "active_param_count", "param_count", "block_layout",
+    "init_cache", "init_lm_params", "lm_decode_step", "lm_forward",
+    "lm_loss", "lm_prefill", "build_cross_cache", "encdec_decode_step",
+    "encdec_loss", "encode", "init_encdec_cache", "init_encdec_params",
+]

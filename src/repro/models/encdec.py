@@ -1,0 +1,202 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The modality frontend is a stub by assignment: the encoder consumes
+precomputed frame embeddings (B, S_src, d). Encoder blocks are
+bidirectional self-attn + MLP; decoder blocks are causal self-attn +
+cross-attn + MLP. Both stacks scan over stacked layer params.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (KVCache, attend_train, attention_init,
+                                    decode_attention)
+from repro.models.common import ModelConfig, vocab_padded
+from repro.models.layers import (dense, embed, embedding_init, layernorm,
+                                 layernorm_init, rmsnorm, rmsnorm_init,
+                                 softcap, unembed)
+from repro.models.mlp import mlp, mlp_init
+from repro.sharding.hints import maybe_shard
+
+
+def _norms(cfg):
+    if cfg.norm_type == "layernorm":
+        return layernorm_init, layernorm
+    return rmsnorm_init, rmsnorm
+
+
+def _enc_block_init(key, cfg):
+    ninit, _ = _norms(cfg)
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": ninit(cfg.d_model, cfg.pdtype),
+        "attn": attention_init(ks[0], cfg),
+        "ln2": ninit(cfg.d_model, cfg.pdtype),
+        "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.pdtype,
+                        cfg.mlp_gated),
+    }
+
+
+def _dec_block_init(key, cfg):
+    ninit, _ = _norms(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": ninit(cfg.d_model, cfg.pdtype),
+        "self_attn": attention_init(ks[0], cfg),
+        "ln_x": ninit(cfg.d_model, cfg.pdtype),
+        "cross_attn": attention_init(ks[1], cfg),
+        "ln2": ninit(cfg.d_model, cfg.pdtype),
+        "mlp": mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.pdtype,
+                        cfg.mlp_gated),
+    }
+
+
+def init_encdec_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    ninit, _ = _norms(cfg)
+    ks = jax.random.split(key, 4)
+    ekeys = jax.random.split(ks[0], cfg.enc_layers)
+    dkeys = jax.random.split(ks[1], cfg.dec_layers)
+    return {
+        "embed": embedding_init(ks[2], vocab_padded(cfg), cfg.d_model,
+                                cfg.pdtype),
+        "enc_blocks": jax.vmap(lambda k: _enc_block_init(k, cfg))(ekeys),
+        "dec_blocks": jax.vmap(lambda k: _dec_block_init(k, cfg))(dkeys),
+        "enc_norm": ninit(cfg.d_model, cfg.pdtype),
+        "final_norm": ninit(cfg.d_model, cfg.pdtype),
+    }
+
+
+def encode(params, src_emb, cfg: ModelConfig):
+    """src_emb (B, Ss, d) -> encoder output (B, Ss, d)."""
+    _, norm = _norms(cfg)
+    x = src_emb.astype(cfg.cdtype)
+
+    def body(x, bp):
+        x = maybe_shard(x, "residual")
+        h = norm(bp["ln1"], x, cfg.norm_eps)
+        h, _ = attend_train(bp["attn"], h, cfg, causal=False)
+        x = x + h
+        h = norm(bp["ln2"], x, cfg.norm_eps)
+        return x + mlp(bp["mlp"], h, cfg.cdtype, cfg.mlp_act), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    else:
+        for g in range(cfg.enc_layers):
+            x, _ = body(x, jax.tree_util.tree_map(
+                lambda a: a[g], params["enc_blocks"]))
+    return norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def decode_train(params, enc_out, tgt_tokens, cfg: ModelConfig,
+                 return_hidden: bool = False):
+    """Teacher-forced decoder. tgt_tokens (B, St) -> logits (or the
+    final-norm hidden when return_hidden)."""
+    _, norm = _norms(cfg)
+    x = embed(params["embed"], tgt_tokens, cfg.cdtype)
+
+    def body(x, bp):
+        x = maybe_shard(x, "residual")
+        h = norm(bp["ln1"], x, cfg.norm_eps)
+        h, _ = attend_train(bp["self_attn"], h, cfg, causal=True)
+        x = x + h
+        h = norm(bp["ln_x"], x, cfg.norm_eps)
+        h, _ = attend_train(bp["cross_attn"], h, cfg, causal=False,
+                            kv_x=enc_out)
+        x = x + h
+        h = norm(bp["ln2"], x, cfg.norm_eps)
+        return x + mlp(bp["mlp"], h, cfg.cdtype, cfg.mlp_act), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    else:
+        for g in range(cfg.dec_layers):
+            x, _ = body(x, jax.tree_util.tree_map(
+                lambda a: a[g], params["dec_blocks"]))
+    x = norm(params["final_norm"], x, cfg.norm_eps)
+    if return_hidden:
+        return x
+    return unembed(params["embed"], x, cfg.vocab)
+
+
+def encdec_loss(params, batch, cfg: ModelConfig):
+    """batch: {src_emb (B,Ss,d), tokens (B,St+1)}. Chunked CE."""
+    from repro.models.transformer import chunked_ce
+    tokens = batch["tokens"]
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    enc_out = encode(params, batch["src_emb"], cfg)
+    x = decode_train(params, enc_out, inp, cfg, return_hidden=True)
+    ce = chunked_ce(lambda h: unembed(params["embed"], h, cfg.vocab),
+                    x, tgt, cfg.ce_chunk)
+    return ce, {"ce": ce, "aux": jnp.zeros(()),
+                "ppl_proxy": jnp.exp(jnp.minimum(ce, 20.0))}
+
+
+# ---------------------------------------------------------------- decode --
+def init_encdec_cache(cfg: ModelConfig, batch: int, max_tgt: int,
+                      src_len: int, dtype=jnp.bfloat16):
+    l = cfg.dec_layers
+    s_shape = (l, batch, max_tgt, cfg.n_kv, cfg.head_dim)
+    x_shape = (l, batch, src_len, cfg.n_kv, cfg.head_dim)
+    return {"self": KVCache(k=jnp.zeros(s_shape, dtype),
+                            v=jnp.zeros(s_shape, dtype)),
+            "cross": KVCache(k=jnp.zeros(x_shape, dtype),
+                             v=jnp.zeros(x_shape, dtype))}
+
+
+def build_cross_cache(params, enc_out, cfg: ModelConfig, dtype=jnp.bfloat16):
+    """Precompute cross-attention K/V from encoder output, per layer."""
+    b, ss, _ = enc_out.shape
+
+    def one(bp):
+        k = dense(bp["cross_attn"]["wk"], enc_out, cfg.cdtype)
+        v = dense(bp["cross_attn"]["wv"], enc_out, cfg.cdtype)
+        return KVCache(
+            k=k.reshape(b, ss, cfg.n_kv, cfg.head_dim).astype(dtype),
+            v=v.reshape(b, ss, cfg.n_kv, cfg.head_dim).astype(dtype))
+
+    return jax.vmap(one)(params["dec_blocks"])
+
+
+def encdec_decode_step(params, token, pos, caches, cfg: ModelConfig):
+    """token (B,), pos scalar; caches {self: KVCache, cross: KVCache}."""
+    _, norm = _norms(cfg)
+    x = embed(params["embed"], token[:, None], cfg.cdtype)
+
+    def body(x, sl):
+        bp, selfc, crossc = sl
+        h = norm(bp["ln1"], x, cfg.norm_eps)
+        h, selfc = decode_attention(bp["self_attn"], h, selfc, pos, cfg)
+        x = x + h
+        h = norm(bp["ln_x"], x, cfg.norm_eps)
+        h, _ = decode_attention(bp["cross_attn"], h, crossc, pos, cfg,
+                                cross=True)
+        x = x + h
+        h = norm(bp["ln2"], x, cfg.norm_eps)
+        return x + mlp(bp["mlp"], h, cfg.cdtype, cfg.mlp_act), selfc
+
+    if cfg.scan_layers:
+        x, new_self = jax.lax.scan(
+            body, x, (params["dec_blocks"], caches["self"],
+                      caches["cross"]))
+    else:
+        outs = []
+        for g in range(cfg.dec_layers):
+            sl = jax.tree_util.tree_map(
+                lambda a: a[g], (params["dec_blocks"], caches["self"],
+                                 caches["cross"]))
+            x, nc = body(x, sl)
+            outs.append(nc)
+        new_self = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *outs)
+    x = norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg.vocab)
+    return logits[:, 0], {"self": new_self, "cross": caches["cross"]}

@@ -1,0 +1,113 @@
+"""Primitive layers shared by every architecture (pure functions + pytrees).
+
+Parameters are plain dicts of jnp arrays so they stack cleanly for
+scan-over-layers and shard transparently under pjit. Initializers take an
+explicit PRNG key; compute runs in cfg.compute_dtype with f32 reductions.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ----------------------------------------------------------------- norms
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1 + scale)
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------- linear
+
+def dense_init(key, d_in: int, d_out: int, bias: bool = False,
+               dtype=jnp.float32, scale: Optional[float] = None):
+    if scale is None:
+        scale = d_in ** -0.5
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32)
+               * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x, compute_dtype=None):
+    w = p["w"]
+    if compute_dtype is not None:
+        w = w.astype(compute_dtype)
+        x = x.astype(compute_dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ------------------------------------------------------------- embedding
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32,
+                   n_real: Optional[int] = None):
+    """vocab = padded table rows; n_real (<= vocab) marks live ids."""
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32)
+                      * (d ** -0.5)).astype(dtype)}
+
+
+def embed(p, ids, compute_dtype):
+    return jnp.take(p["table"], ids, axis=0).astype(compute_dtype)
+
+
+def unembed(p, x, n_real: Optional[int] = None):
+    """Tied read-out: (..., d) @ (d, vocab) in f32 for a stable softmax.
+
+    n_real masks padded table rows to -inf so the softmax/CE matches the
+    unpadded vocabulary exactly."""
+    logits = x.astype(jnp.float32) @ p["table"].astype(jnp.float32).T
+    v = p["table"].shape[0]
+    if n_real is not None and n_real < v:
+        mask = jnp.arange(v) < n_real
+        logits = jnp.where(mask, logits, -1e30)
+    return logits
+
+
+# ------------------------------------------------------------------ rope
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """Rotary embedding. x: (..., S, H, D) or (..., S, D); positions (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if x.ndim == cos.ndim + 1:  # broadcast over a heads axis
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]):
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)

@@ -1,0 +1,26 @@
+"""Gated MLP (SwiGLU / GeGLU) used by all dense families."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, dense_init
+
+
+def mlp_init(key, d: int, ff: int, dtype=jnp.float32, gated: bool = True):
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": dense_init(ks[0], d, ff, False, dtype),
+        "wo": dense_init(ks[2], ff, d, False, dtype, scale=ff ** -0.5),
+    }
+    if gated:
+        p["wg"] = dense_init(ks[1], d, ff, False, dtype)
+    return p
+
+
+def mlp(p, x, cd, act: str = "silu"):
+    h = dense(p["wi"], x, cd)
+    actf = jax.nn.silu if act == "silu" else jax.nn.gelu
+    if "wg" in p:  # gated (SwiGLU/GeGLU)
+        return dense(p["wo"], h * actf(dense(p["wg"], x, cd)), cd)
+    return dense(p["wo"], actf(h), cd)  # classic 2-matrix MLP

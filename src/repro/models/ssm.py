@@ -1,0 +1,175 @@
+"""Mamba2 (SSD) block — chunked-parallel training, O(1)-state decode.
+
+The state-space recurrence  S_t = a_t S_{t-1} + dt_t x_t ⊗ B_t,
+y_t = C_t·S_t + D x_t  is computed with the SSD chunked algorithm:
+intra-chunk terms via an attention-like masked-decay matmul, inter-chunk
+state carried by a lax.scan over chunks. This is the same
+"sequential recurrence -> chunked associative scan" transformation the
+TEDA core uses (DESIGN.md §2) — deliberately shared machinery.
+
+Decode keeps (conv buffer (B, W-1, ch), SSM state (B, H, P, N)) — O(1) in
+context length, which is what makes zamba2/xlstm the long_500k archs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, dense_init, rmsnorm, rmsnorm_init
+
+CONV_W = 4  # depthwise causal conv width (mamba2 default)
+
+
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray   # (B, CONV_W-1, conv_ch)
+    state: jnp.ndarray  # (B, H, P, N)
+
+
+def ssm_dims(cfg, d=None):
+    d = d or cfg.d_model
+    d_in = cfg.ssm_expand * d
+    p = cfg.ssm_head_dim
+    h = d_in // p
+    n = cfg.ssm_state
+    return d, d_in, h, p, n
+
+
+def ssm_init(key, cfg, d=None):
+    d, d_in, h, p, n = ssm_dims(cfg, d)
+    conv_ch = d_in + 2 * n
+    ks = jax.random.split(key, 5)
+    return {
+        # in_proj -> [z, x, B, C, dt]
+        "win": dense_init(ks[0], d, 2 * d_in + 2 * n + h, False, cfg.pdtype),
+        "conv": (jax.random.normal(ks[1], (CONV_W, conv_ch), jnp.float32)
+                 * 0.1).astype(cfg.pdtype),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": rmsnorm_init(d_in, cfg.pdtype),
+        "wout": dense_init(ks[2], d_in, d, False, cfg.pdtype,
+                           scale=d_in ** -0.5),
+    }
+
+
+def _split(p, u, cfg, d):
+    _, d_in, h, _, n = ssm_dims(cfg, d)
+    z = u[..., :d_in]
+    xbc = u[..., d_in:d_in + d_in + 2 * n]
+    dt = u[..., -h:]
+    return z, xbc, dt
+
+
+def _causal_conv(w, seq, cache=None):
+    """Depthwise causal conv. seq (B, T, ch), w (W, ch)."""
+    if cache is None:
+        pad = jnp.zeros((seq.shape[0], CONV_W - 1, seq.shape[2]), seq.dtype)
+    else:
+        pad = cache.astype(seq.dtype)
+    full = jnp.concatenate([pad, seq], axis=1)  # (B, T+W-1, ch)
+    out = sum(full[:, i:i + seq.shape[1]] * w[i][None, None]
+              for i in range(CONV_W))
+    new_cache = full[:, -(CONV_W - 1):]
+    return jax.nn.silu(out), new_cache
+
+
+def ssm_forward(params, x, cfg, d=None):
+    """Training/prefill path. x (B, T, d) -> (B, T, d). T % chunk == 0."""
+    d, d_in, h, p, n = ssm_dims(cfg, d)
+    b, t, _ = x.shape
+    q = min(cfg.ssm_chunk, t)
+    assert t % q == 0, (t, q)
+    nc = t // q
+    cd = cfg.cdtype
+
+    u = dense(params["win"], x, cd)
+    z, xbc, dt = _split(params, u, cfg, d)
+    xbc, _ = _causal_conv(params["conv"].astype(cd), xbc)
+    xs = xbc[..., :d_in].reshape(b, t, h, p)
+    bs = xbc[..., d_in:d_in + n]  # (B, T, N)
+    cs = xbc[..., d_in + n:]      # (B, T, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"])  # (B, T, H)
+    a = -jnp.exp(params["a_log"])  # (H,) negative decay rates
+
+    # ---- chunked SSD: lax.scan over chunks, O(q^2 h) working set --------
+    # (the all-chunk-parallel form would materialize a (b,nc,q,q,h) decay
+    # tensor — per-chunk sequencing is the memory-sane SSD schedule)
+    la = (dt * a).reshape(nc, b, q, h)  # chunk-major for scan
+    xs_c = xs.reshape(b, nc, q, h, p).transpose(1, 0, 2, 3, 4)
+    bs_c = bs.reshape(b, nc, q, n).transpose(1, 0, 2, 3)
+    cs_c = cs.reshape(b, nc, q, n).transpose(1, 0, 2, 3)
+    dt_c = dt.reshape(b, nc, q, h).transpose(1, 0, 2, 3)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+
+    def chunk_step(s_prev, inp):
+        la_c, xc, bc, cc, dc = inp  # (b,q,h), (b,q,h,p), (b,q,n)x2, (b,q,h)
+        cl = jnp.cumsum(la_c, axis=1)  # (b, q, h)
+        # intra: y[t] = sum_{s<=t} exp(cl_t - cl_s) dt_s (C_t.B_s) x_s
+        decay = jnp.exp(cl[:, :, None] - cl[:, None])  # (b, t, s, h)
+        decay = jnp.where(tri[None, :, :, None], decay, 0.0)
+        cb = jnp.einsum("btn,bsn->bts", cc, bc,
+                        preferred_element_type=jnp.float32)
+        w_ts = cb[..., None] * decay * dc[:, None]  # (b, t, s, h)
+        y_in = jnp.einsum("btsh,bshp->bthp", w_ts.astype(cd), xc,
+                          preferred_element_type=jnp.float32)
+        # inter: contribution of the carried state
+        y_in = y_in + jnp.einsum("bth,btn,bhpn->bthp", jnp.exp(cl),
+                                 cc.astype(jnp.float32), s_prev,
+                                 preferred_element_type=jnp.float32)
+        # state update for the next chunk
+        tail = jnp.exp(cl[:, -1:] - cl)  # (b, q, h)
+        zb = jnp.einsum("bth,bthp,btn->bhpn", (tail * dc).astype(cd), xc,
+                        bc, preferred_element_type=jnp.float32)
+        s_new = s_prev * jnp.exp(cl[:, -1])[..., None, None] + zb
+        return s_new, y_in
+
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    if nc == 1:  # loop-free path (dry-run flop calibration)
+        _, y = chunk_step(s0, (la[0], xs_c[0], bs_c[0], cs_c[0], dt_c[0]))
+        y = y.reshape(b, t, h, p)
+    else:
+        _, y_chunks = jax.lax.scan(chunk_step, s0,
+                                   (la, xs_c, bs_c, cs_c, dt_c))
+        y = y_chunks.transpose(1, 0, 2, 3, 4).reshape(b, t, h, p)
+    y = y + params["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, t, d_in).astype(cd)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return dense(params["wout"], y, cd)
+
+
+def ssm_cache_init(cfg, batch: int, d=None, dtype=jnp.float32) -> SSMCache:
+    d, d_in, h, p, n = ssm_dims(cfg, d)
+    return SSMCache(
+        conv=jnp.zeros((batch, CONV_W - 1, d_in + 2 * n), dtype),
+        state=jnp.zeros((batch, h, p, n), dtype),
+    )
+
+
+def ssm_decode_step(params, x, cache: SSMCache, cfg, d=None):
+    """x (B, 1, d) -> (B, 1, d), O(1) state update."""
+    d, d_in, h, p, n = ssm_dims(cfg, d)
+    b = x.shape[0]
+    cd = cfg.cdtype
+
+    u = dense(params["win"], x, cd)
+    z, xbc, dt = _split(params, u, cfg, d)
+    xbc, new_conv = _causal_conv(params["conv"].astype(cd), xbc, cache.conv)
+    xs = xbc[:, 0, :d_in].reshape(b, h, p)
+    bs = xbc[:, 0, d_in:d_in + n]
+    cs = xbc[:, 0, d_in + n:]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+
+    dec = jnp.exp(dt * a)  # (B, H)
+    s_new = (cache.state * dec[..., None, None]
+             + jnp.einsum("bh,bhp,bn->bhpn", dt, xs.astype(jnp.float32),
+                          bs.astype(jnp.float32)))
+    y = jnp.einsum("bn,bhpn->bhp", cs.astype(jnp.float32), s_new)
+    y = y + params["d_skip"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, 1, d_in).astype(cd)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return dense(params["wout"], y, cd), SSMCache(conv=new_conv,
+                                                  state=s_new)

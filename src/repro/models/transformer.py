@@ -1,0 +1,436 @@
+"""Decoder-only LM assembly for all assigned families.
+
+A model is a sequence of *groups*, each group a short static list of
+blocks; groups are identical in structure, so parameters are stacked with
+a leading (n_groups,) axis and the stack is executed with lax.scan
+(compile-time containment: HLO size is O(group), not O(L), critical for
+the 34B/132B dry-runs at 512 devices).
+
+Block kinds:
+  attn      — GQA attention (+RoPE/SWA/softcap/bias variants) + gated MLP
+  moe       — attention + mixture-of-experts FFN
+  ssm       — Mamba2 (SSD) block
+  mlstm     — xLSTM matrix-memory block
+  slstm     — xLSTM scalar-memory block
+  shared    — zamba2 shared attention+MLP block (one weight set reused
+              every group, fed concat(x, embedding residual))
+
+Families map to group layouts in `block_layout(cfg)`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (KVCache, attend_train, attention_init,
+                                    decode_attention)
+from repro.models.common import ModelConfig, vocab_padded
+from repro.models.layers import (dense, dense_init, embed, embedding_init,
+                                 layernorm, layernorm_init, rmsnorm,
+                                 rmsnorm_init, softcap, unembed)
+from repro.models.mlp import mlp, mlp_init
+from repro.models.moe import moe, moe_init
+from repro.sharding.hints import maybe_shard
+from repro.models.ssm import (SSMCache, ssm_cache_init, ssm_decode_step,
+                              ssm_forward, ssm_init)
+from repro.models.xlstm import (MLSTMCache, SLSTMCache, mlstm_cache_init,
+                                mlstm_decode_step, mlstm_forward, mlstm_init,
+                                slstm_cache_init, slstm_decode_step,
+                                slstm_forward, slstm_init)
+
+
+# ------------------------------------------------------------- layouts --
+class BlockDef(NamedTuple):
+    kind: str
+    window: Optional[int] = None  # sliding window for this block
+
+
+def block_layout(cfg: ModelConfig) -> Tuple[List[BlockDef], int]:
+    """Returns (blocks-per-group, n_groups)."""
+    if cfg.family == "moe":
+        return [BlockDef("moe", cfg.window)], cfg.n_layers
+    if cfg.family == "ssm":  # xlstm
+        if cfg.slstm_every:
+            grp = [BlockDef("mlstm")] * (cfg.slstm_every - 1) + [
+                BlockDef("slstm")]
+            assert cfg.n_layers % cfg.slstm_every == 0
+            return grp, cfg.n_layers // cfg.slstm_every
+        return [BlockDef("mlstm")], cfg.n_layers
+    if cfg.family == "hybrid":  # zamba2
+        per = cfg.shared_period
+        assert per and cfg.n_layers % per == 0
+        grp = [BlockDef("ssm")] * per + [BlockDef("shared")]
+        return grp, cfg.n_layers // per
+    if cfg.local_global_period:  # gemma2
+        grp = [BlockDef("attn", cfg.window), BlockDef("attn", None)]
+        assert cfg.n_layers % 2 == 0
+        return grp, cfg.n_layers // 2
+    return [BlockDef("attn", cfg.window)], cfg.n_layers
+
+
+def _norm_fns(cfg):
+    if getattr(cfg, "norm_type", "rmsnorm") == "layernorm":
+        return layernorm_init, layernorm
+    return rmsnorm_init, rmsnorm
+
+
+# ---------------------------------------------------------------- init --
+def _block_init(key, bd: BlockDef, cfg: ModelConfig) -> Dict[str, Any]:
+    ninit, _ = _norm_fns(cfg)
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if bd.kind in ("attn", "moe"):
+        p = {
+            "ln1": ninit(d, cfg.pdtype),
+            "attn": attention_init(ks[0], cfg),
+            "ln2": ninit(d, cfg.pdtype),
+        }
+        if cfg.local_global_period:  # gemma2 sandwich norms
+            p["post_ln1"] = ninit(d, cfg.pdtype)
+            p["post_ln2"] = ninit(d, cfg.pdtype)
+        if bd.kind == "moe":
+            p["moe"] = moe_init(ks[1], cfg)
+        else:
+            p["mlp"] = mlp_init(ks[1], d, cfg.d_ff, cfg.pdtype,
+                                cfg.mlp_gated)
+        return p
+    if bd.kind == "ssm":
+        return {"ln1": ninit(d, cfg.pdtype), "ssm": ssm_init(ks[0], cfg)}
+    if bd.kind == "mlstm":
+        return {"ln1": ninit(d, cfg.pdtype), "mlstm": mlstm_init(ks[0], cfg)}
+    if bd.kind == "slstm":
+        return {"ln1": ninit(d, cfg.pdtype), "slstm": slstm_init(ks[0], cfg)}
+    raise ValueError(bd.kind)
+
+
+def _shared_init(key, cfg: ModelConfig) -> Dict[str, Any]:
+    """zamba2 shared block: concat(x, emb0) -> proj -> attn + mlp -> d."""
+    ninit, _ = _norm_fns(cfg)
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    return {
+        "ln_in": ninit(2 * d, cfg.pdtype),
+        "win": dense_init(ks[0], 2 * d, d, False, cfg.pdtype),
+        "attn": attention_init(ks[1], cfg),
+        "ln2": ninit(d, cfg.pdtype),
+        "mlp": mlp_init(ks[2], d, cfg.d_ff, cfg.pdtype),
+    }
+
+
+def init_lm_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    grp, n_groups = block_layout(cfg)
+    ninit, _ = _norm_fns(cfg)
+    keys = jax.random.split(key, len(grp) + 3)
+    params: Dict[str, Any] = {
+        "embed": embedding_init(keys[0], vocab_padded(cfg), cfg.d_model,
+                                cfg.pdtype),
+        "final_norm": ninit(cfg.d_model, cfg.pdtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(keys[1], cfg.d_model, cfg.vocab,
+                                       False, cfg.pdtype)
+    for j, bd in enumerate(grp):
+        if bd.kind == "shared":
+            continue  # one weight set for all groups, stored under "shared"
+        gkeys = jax.random.split(keys[2 + j], n_groups)
+        params[f"blocks_{j}"] = jax.vmap(
+            lambda k: _block_init(k, bd, cfg))(gkeys)
+    if any(b.kind == "shared" for b in grp):
+        params["shared"] = _shared_init(keys[-1], cfg)
+    return params
+
+
+# ------------------------------------------------------------- forward --
+def _apply_block(bp, bd: BlockDef, x, cfg, *, shared_params=None,
+                 emb0=None):
+    """Training-path block application. x (B, S, d)."""
+    _, norm = _norm_fns(cfg)
+    post = cfg.local_global_period > 0
+    if bd.kind in ("attn", "moe"):
+        h = norm(bp["ln1"], x, cfg.norm_eps)
+        h, _ = attend_train(bp["attn"], h, cfg, causal=True,
+                            window=bd.window)
+        if post:
+            h = norm(bp["post_ln1"], h, cfg.norm_eps)
+        x = x + h
+        h = norm(bp["ln2"], x, cfg.norm_eps)
+        if bd.kind == "moe":
+            h, aux = moe(bp["moe"], h, cfg)
+        else:
+            h, aux = mlp(bp["mlp"], h, cfg.cdtype,
+                         getattr(cfg, "mlp_act", "silu")), {}
+        if post:
+            h = norm(bp["post_ln2"], h, cfg.norm_eps)
+        return x + h, aux
+    if bd.kind == "ssm":
+        h = norm(bp["ln1"], x, cfg.norm_eps)
+        return x + ssm_forward(bp["ssm"], h, cfg), {}
+    if bd.kind == "mlstm":
+        h = norm(bp["ln1"], x, cfg.norm_eps)
+        return x + mlstm_forward(bp["mlstm"], h, cfg), {}
+    if bd.kind == "slstm":
+        h = norm(bp["ln1"], x, cfg.norm_eps)
+        return x + slstm_forward(bp["slstm"], h, cfg), {}
+    if bd.kind == "shared":
+        sp = shared_params
+        h = jnp.concatenate([x, emb0], axis=-1)
+        h = norm(sp["ln_in"], h, cfg.norm_eps)
+        h = dense(sp["win"], h, cfg.cdtype)
+        h, _ = attend_train(sp["attn"], h, cfg, causal=True)
+        x = x + h
+        h = norm(sp["ln2"], x, cfg.norm_eps)
+        return x + mlp(sp["mlp"], h, cfg.cdtype), {}
+    raise ValueError(bd.kind)
+
+
+def lm_backbone(params, tokens, cfg: ModelConfig):
+    """tokens (B, S) int32 -> (final-norm hidden (B, S, d), aux)."""
+    grp, n_groups = block_layout(cfg)
+    _, norm = _norm_fns(cfg)
+    x = embed(params["embed"], tokens, cfg.cdtype)
+    if cfg.local_global_period:  # gemma scales embeddings
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.cdtype)
+    x = maybe_shard(x, "residual")
+    emb0 = x
+    shared = params.get("shared")
+
+    def group_body(x, gp):
+        aux_acc = jnp.zeros((), jnp.float32)
+        x = x.astype(cfg.cdtype)  # keep the remat-saved carry in bf16
+        x = maybe_shard(x, "residual")
+        for j, bd in enumerate(grp):
+            bp = None if bd.kind == "shared" else gp[f"blocks_{j}"]
+            x, aux = _apply_block(
+                bp, bd, x, cfg, shared_params=shared, emb0=emb0)
+            if aux:
+                aux_acc = aux_acc + aux["load_balance"] \
+                    + 1e-3 * aux["router_z"]
+        return x, aux_acc
+
+    if cfg.remat:
+        policy = {
+            "nothing": jax.checkpoint_policies.nothing_saveable,
+            "dots": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+            "everything": jax.checkpoint_policies.everything_saveable,
+        }[cfg.remat_policy]
+        group_body = jax.checkpoint(group_body, policy=policy)
+
+    stacked = {k: params[k] for k in params if k.startswith("blocks_")}
+    if cfg.scan_layers:
+        go = cfg.outer_scan
+        if go and n_groups % go == 0 and go < n_groups:
+            gi = n_groups // go
+
+            def outer_body(x, gp_outer):
+                x, aux = jax.lax.scan(group_body, x, gp_outer)
+                return x, jnp.sum(aux)
+
+            if cfg.remat:
+                outer_body = jax.checkpoint(
+                    outer_body,
+                    policy=jax.checkpoint_policies.nothing_saveable)
+            stacked2 = jax.tree_util.tree_map(
+                lambda a: a.reshape((go, gi) + a.shape[1:]), stacked)
+            x, aux = jax.lax.scan(outer_body, x, stacked2)
+        else:
+            x, aux = jax.lax.scan(group_body, x, stacked)
+        aux = jnp.sum(aux)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for g in range(n_groups):
+            gp = jax.tree_util.tree_map(lambda a: a[g], stacked)
+            x, a = group_body(x, gp)
+            aux = aux + a
+
+    x = norm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux
+
+
+def lm_logits(params, x, cfg: ModelConfig):
+    """Read-out head on hidden x (..., d) -> (..., vocab) f32."""
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x, cfg.vocab)
+    else:
+        logits = dense(params["unembed"], x).astype(jnp.float32)
+    return softcap(logits, cfg.final_softcap)
+
+
+def lm_forward(params, tokens, cfg: ModelConfig):
+    """tokens (B, S) int32 -> (logits (B, S, vocab) f32, aux)."""
+    x, aux = lm_backbone(params, tokens, cfg)
+    return lm_logits(params, x, cfg), aux
+
+
+def chunked_ce(logits_fn, x, tgt, chunk: int):
+    """Mean next-token CE without materializing (B, S, V): the read-out
+    and log-softmax run per sequence chunk inside a checkpointed scan, so
+    the backward recomputes each chunk's logits (flash-CE)."""
+    b, s, d = x.shape
+    if not chunk or s <= chunk or s % chunk:
+        logits = logits_fn(x)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+        return jnp.mean(logz - gold)
+    nc = s // chunk
+
+    # slice inside the loop (x stays loop-invariant in its original
+    # sharded layout — a reshape/transpose into scan xs would drop the
+    # batch sharding and replicate every chunk's logits)
+    def body(acc, i):
+        xi = jax.lax.dynamic_slice_in_dim(x, i * chunk, chunk, axis=1)
+        ti = jax.lax.dynamic_slice_in_dim(tgt, i * chunk, chunk, axis=1)
+        logits = logits_fn(xi)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ti[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(logz - gold), None
+
+    body = jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                            jnp.arange(nc))
+    return total / (b * s)
+
+
+def lm_loss(params, batch, cfg: ModelConfig):
+    """batch: {tokens (B, S+1)} -> (loss, metrics). Next-token CE."""
+    tokens = batch["tokens"]
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    x, aux = lm_backbone(params, inp, cfg)
+    ce = chunked_ce(lambda h: lm_logits(params, h, cfg), x, tgt,
+                    cfg.ce_chunk)
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux,
+                  "ppl_proxy": jnp.exp(jnp.minimum(ce, 20.0))}
+
+
+# -------------------------------------------------------------- serving --
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16):
+    """Stacked (n_groups, ...) cache pytree matching block_layout."""
+    grp, n_groups = block_layout(cfg)
+    hd, kvh = cfg.head_dim, cfg.n_kv
+
+    def one(bd: BlockDef):
+        if bd.kind in ("attn", "moe", "shared"):
+            s = min(max_seq, bd.window) if bd.window else max_seq
+            shape = (n_groups, batch, s, kvh, hd)
+            # distinct arrays: k and v are donated separately at runtime
+            return KVCache(k=jnp.zeros(shape, dtype),
+                           v=jnp.zeros(shape, dtype))
+        if bd.kind == "ssm":
+            c = ssm_cache_init(cfg, batch, dtype=jnp.float32)
+            return jax.tree_util.tree_map(
+                lambda a: jnp.zeros((n_groups,) + a.shape, a.dtype), c)
+        if bd.kind == "mlstm":
+            c = mlstm_cache_init(cfg, batch, dtype=jnp.float32)
+            return jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape), c)
+        if bd.kind == "slstm":
+            c = slstm_cache_init(cfg, batch, dtype=jnp.float32)
+            return jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape), c)
+        raise ValueError(bd.kind)
+
+    return {f"cache_{j}": one(bd) for j, bd in enumerate(grp)}
+
+
+def _decode_block(bp, bd: BlockDef, x, cache, pos, cfg, *,
+                  shared_params=None, emb0=None):
+    _, norm = _norm_fns(cfg)
+    post = cfg.local_global_period > 0
+    if bd.kind in ("attn", "moe"):
+        ring = bd.window is not None and cache.k.shape[1] == bd.window
+        h = norm(bp["ln1"], x, cfg.norm_eps)
+        h, cache = decode_attention(bp["attn"], h, cache, pos, cfg,
+                                    window=bd.window, ring=ring)
+        if post:
+            h = norm(bp["post_ln1"], h, cfg.norm_eps)
+        x = x + h
+        h = norm(bp["ln2"], x, cfg.norm_eps)
+        if bd.kind == "moe":
+            h, _ = moe(bp["moe"], h, cfg)
+        else:
+            h = mlp(bp["mlp"], h, cfg.cdtype, getattr(cfg, "mlp_act",
+                                                      "silu"))
+        if post:
+            h = norm(bp["post_ln2"], h, cfg.norm_eps)
+        return x + h, cache
+    if bd.kind == "ssm":
+        h = norm(bp["ln1"], x, cfg.norm_eps)
+        h, cache = ssm_decode_step(bp["ssm"], h, cache, cfg)
+        return x + h, cache
+    if bd.kind == "mlstm":
+        h = norm(bp["ln1"], x, cfg.norm_eps)
+        h, cache = mlstm_decode_step(bp["mlstm"], h, cache, cfg)
+        return x + h, cache
+    if bd.kind == "slstm":
+        h = norm(bp["ln1"], x, cfg.norm_eps)
+        h, cache = slstm_decode_step(bp["slstm"], h, cache, cfg)
+        return x + h, cache
+    if bd.kind == "shared":
+        sp = shared_params
+        h = jnp.concatenate([x, emb0], axis=-1)
+        h = norm(sp["ln_in"], h, cfg.norm_eps)
+        h = dense(sp["win"], h, cfg.cdtype)
+        h, cache = decode_attention(sp["attn"], h, cache, pos, cfg)
+        x = x + h
+        h = norm(sp["ln2"], x, cfg.norm_eps)
+        return x + mlp(sp["mlp"], h, cfg.cdtype), cache
+    raise ValueError(bd.kind)
+
+
+def lm_decode_step(params, token, pos, caches, cfg: ModelConfig):
+    """One decode step. token (B,) int32, pos scalar int32.
+
+    Returns (logits (B, vocab) f32, updated caches).
+    """
+    grp, n_groups = block_layout(cfg)
+    _, norm = _norm_fns(cfg)
+    x = embed(params["embed"], token[:, None], cfg.cdtype)  # (B, 1, d)
+    if cfg.local_global_period:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.cdtype)
+    emb0 = x
+    shared = params.get("shared")
+
+    stacked_p = {k: params[k] for k in params if k.startswith("blocks_")}
+
+    def group_body(x, slices):
+        gp, gc = slices
+        new_caches = {}
+        for j, bd in enumerate(grp):
+            bp = None if bd.kind == "shared" else gp[f"blocks_{j}"]
+            x, nc = _decode_block(bp, bd, x,
+                                  gc[f"cache_{j}"], pos, cfg,
+                                  shared_params=shared, emb0=emb0)
+            new_caches[f"cache_{j}"] = nc
+        return x, new_caches
+
+    if cfg.scan_layers:
+        x, new_caches = jax.lax.scan(group_body, x, (stacked_p, caches))
+    else:
+        outs = []
+        for g in range(n_groups):
+            gp = jax.tree_util.tree_map(lambda a: a[g], stacked_p)
+            gc = jax.tree_util.tree_map(lambda a: a[g], caches)
+            x, nc = group_body(x, (gp, gc))
+            outs.append(nc)
+        new_caches = jax.tree_util.tree_map(
+            lambda *a: jnp.stack(a), *outs)
+
+    x = norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg.vocab) if cfg.tie_embeddings \
+        else dense(params["unembed"], x).astype(jnp.float32)
+    logits = softcap(logits, cfg.final_softcap)
+    return logits[:, 0], new_caches
+
+
+def lm_prefill(params, tokens, cfg: ModelConfig):
+    """Prefill forward: full backbone over the prompt, read-out on the
+    LAST position only (a production prefill returns the first sampled
+    token's logits + the KV cache; materializing (B, S, V) logits would
+    dwarf every other buffer). Returns logits (B, vocab) f32."""
+    x, _ = lm_backbone(params, tokens, cfg)
+    return lm_logits(params, x[:, -1], cfg)

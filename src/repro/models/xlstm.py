@@ -1,0 +1,271 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM + sequential sLSTM (arXiv:2405.04517).
+
+mLSTM is a matrix-memory linear-attention variant with exponential
+input gates and sigmoid forget gates; we implement the log-space
+stabilized *chunkwise* form (same chunk-scan pattern as ssm.py / the TEDA
+core): intra-chunk via masked-decay matmuls, inter-chunk state
+(C tilde (P,P), n tilde (P), log-scale m) carried by lax.scan. Decode is a
+single stabilized recurrence step, O(1) in context — which is why
+xlstm-350m runs the long_500k cell.
+
+sLSTM keeps per-head scalar memories with a genuine hidden-state
+recurrence (R h_{t-1}) — inherently sequential, implemented with lax.scan
+over time (it is a small minority of blocks: cfg.slstm_every).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, dense_init, rmsnorm, rmsnorm_init
+
+CONV_W = 4
+
+
+# ============================================================== mLSTM ====
+class MLSTMCache(NamedTuple):
+    c: jnp.ndarray      # (B, H, P, P) stabilized matrix memory
+    n: jnp.ndarray      # (B, H, P) stabilized normalizer
+    m: jnp.ndarray      # (B, H) log scale
+    conv: jnp.ndarray   # (B, CONV_W-1, d_in)
+
+
+def mlstm_dims(cfg, d=None):
+    d = d or cfg.d_model
+    d_in = int(cfg.mlstm_proj_factor * d)
+    h = cfg.n_heads
+    p = d_in // h
+    return d, d_in, h, p
+
+
+def mlstm_init(key, cfg, d=None):
+    d, d_in, h, p = mlstm_dims(cfg, d)
+    ks = jax.random.split(key, 7)
+    return {
+        "wup": dense_init(ks[0], d, 2 * d_in, False, cfg.pdtype),
+        "conv": (jax.random.normal(ks[1], (CONV_W, d_in), jnp.float32)
+                 * 0.1).astype(cfg.pdtype),
+        "wq": dense_init(ks[2], d_in, d_in, False, cfg.pdtype),
+        "wk": dense_init(ks[3], d_in, d_in, False, cfg.pdtype,
+                         scale=(d_in ** -0.5) * (p ** -0.25)),
+        "wv": dense_init(ks[4], d_in, d_in, False, cfg.pdtype),
+        "wif": dense_init(ks[5], d_in, 2 * h, True, cfg.pdtype),
+        "norm": rmsnorm_init(d_in, cfg.pdtype),
+        "wdown": dense_init(ks[6], d_in, d, False, cfg.pdtype,
+                            scale=d_in ** -0.5),
+    }
+
+
+def _conv_causal(w, seq, cache=None):
+    if cache is None:
+        pad = jnp.zeros((seq.shape[0], CONV_W - 1, seq.shape[2]), seq.dtype)
+    else:
+        pad = cache.astype(seq.dtype)
+    full = jnp.concatenate([pad, seq], axis=1)
+    out = sum(full[:, i:i + seq.shape[1]] * w[i][None, None]
+              for i in range(CONV_W))
+    return jax.nn.silu(out), full[:, -(CONV_W - 1):]
+
+
+def _mlstm_proj(params, x, cfg, d):
+    d, d_in, h, p = mlstm_dims(cfg, d)
+    cd = cfg.cdtype
+    up = dense(params["wup"], x, cd)
+    xm, z = up[..., :d_in], up[..., d_in:]
+    return xm, z, (d_in, h, p)
+
+
+def mlstm_forward(params, x, cfg, d=None):
+    """Chunkwise-parallel training path. x (B, T, d)."""
+    b, t, _ = x.shape
+    cd = cfg.cdtype
+    xm, z, (d_in, h, p) = _mlstm_proj(params, x, cfg, d)
+    xc, _ = _conv_causal(params["conv"].astype(cd), xm)
+
+    q = dense(params["wq"], xc, cd).reshape(b, t, h, p)
+    k = dense(params["wk"], xc, cd).reshape(b, t, h, p)
+    v = dense(params["wv"], xm, cd).reshape(b, t, h, p)
+    gates = dense(params["wif"], xc, cd).astype(jnp.float32)
+    li = gates[..., :h]                       # log input gate (exp gate)
+    lf = jax.nn.log_sigmoid(gates[..., h:])   # log forget gate
+
+    qch = min(cfg.ssm_chunk, t)
+    assert t % qch == 0
+    nc = t // qch
+    # chunk-major
+    cm = lambda a: a.reshape(b, nc, qch, *a.shape[2:]).transpose(
+        1, 0, 2, *range(3, a.ndim + 1))
+    qc, kc, vc = cm(q), cm(k), cm(v)
+    lic, lfc = cm(li), cm(lf)
+    tri = jnp.tril(jnp.ones((qch, qch), bool))
+
+    def chunk(carry, inp):
+        ct, nt, mc = carry  # (b,h,p,p), (b,h,p), (b,h)
+        qi, ki, vi, lii, lfi = inp
+        cum = jnp.cumsum(lfi, axis=1)          # (b, q, h)
+        g = lii - cum                          # g_s = li_s - cum_s
+        m_row = jax.lax.cummax(g, axis=1)      # (b, q, h)
+        stab = jnp.maximum(m_row, mc[:, None])  # per-row stabilizer
+        # intra-chunk scores
+        sc = jnp.exp(g[:, None] - stab[:, :, None])  # (b, t, s, h)
+        sc = jnp.where(tri[None, :, :, None], sc, 0.0)
+        qk = jnp.einsum("bthp,bshp->btsh", qi, ki,
+                        preferred_element_type=jnp.float32)
+        w_ts = sc * qk
+        num = jnp.einsum("btsh,bshp->bthp", w_ts.astype(cd), vi,
+                         preferred_element_type=jnp.float32)
+        den = jnp.sum(w_ts, axis=2)  # (b, t, h)
+        # inter-chunk (carried state, scale mc)
+        lam = jnp.exp(mc[:, None] - stab)  # (b, q, h)
+        num = num + lam[..., None] * jnp.einsum(
+            "bthp,bhpr->bthr", qi.astype(jnp.float32), ct,
+            preferred_element_type=jnp.float32)
+        den = den + lam * jnp.einsum("bthp,bhp->bth",
+                                     qi.astype(jnp.float32), nt)
+        hmax = jnp.maximum(jnp.abs(den), jnp.exp(-(cum + stab)))
+        y = num / hmax[..., None]
+        # ---- state update -------------------------------------------------
+        cum_last = cum[:, -1]  # (b, h)
+        g_last = jax.lax.cummax(g, axis=1)[:, -1]  # max over chunk
+        m_new = cum_last + jnp.maximum(mc, g_last)
+        scale_old = jnp.exp(mc + cum_last - m_new)  # (b, h)
+        w_s = jnp.exp(cum_last[:, None] + g - m_new[:, None])  # (b, q, h)
+        c_new = (ct * scale_old[..., None, None]
+                 + jnp.einsum("bsh,bshp,bshr->bhpr", w_s,
+                              ki.astype(jnp.float32),
+                              vi.astype(jnp.float32),
+                              preferred_element_type=jnp.float32))
+        n_new = (nt * scale_old[..., None]
+                 + jnp.einsum("bsh,bshp->bhp", w_s, ki.astype(jnp.float32)))
+        return (c_new, n_new, m_new), y
+
+    c0 = jnp.zeros((b, h, p, p), jnp.float32)
+    n0 = jnp.zeros((b, h, p), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    if nc == 1:  # loop-free path (dry-run flop calibration)
+        _, y = chunk((c0, n0, m0), (qc[0], kc[0], vc[0], lic[0], lfc[0]))
+        y = y.reshape(b, t, d_in).astype(cd)
+    else:
+        _, ys = jax.lax.scan(chunk, (c0, n0, m0), (qc, kc, vc, lic, lfc))
+        y = ys.transpose(1, 0, 2, 3, 4).reshape(b, t, d_in).astype(cd)
+
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    return dense(params["wdown"], y, cd)
+
+
+def mlstm_cache_init(cfg, batch, d=None, dtype=jnp.float32) -> MLSTMCache:
+    d, d_in, h, p = mlstm_dims(cfg, d)
+    return MLSTMCache(
+        c=jnp.zeros((batch, h, p, p), dtype),
+        n=jnp.zeros((batch, h, p), dtype),
+        m=jnp.full((batch, h), -1e30, dtype),
+        conv=jnp.zeros((batch, CONV_W - 1, d_in), dtype),
+    )
+
+
+def mlstm_decode_step(params, x, cache: MLSTMCache, cfg, d=None):
+    """Stabilized single-step recurrence. x (B, 1, d)."""
+    b = x.shape[0]
+    cd = cfg.cdtype
+    xm, z, (d_in, h, p) = _mlstm_proj(params, x, cfg, d)
+    xc, conv_new = _conv_causal(params["conv"].astype(cd), xm, cache.conv)
+
+    q = dense(params["wq"], xc, cd).reshape(b, h, p).astype(jnp.float32)
+    k = dense(params["wk"], xc, cd).reshape(b, h, p).astype(jnp.float32)
+    v = dense(params["wv"], xm, cd).reshape(b, h, p).astype(jnp.float32)
+    gates = dense(params["wif"], xc, cd).astype(jnp.float32)[:, 0]
+    li, lf = gates[..., :h], jax.nn.log_sigmoid(gates[..., h:])
+
+    m_new = jnp.maximum(lf + cache.m, li)
+    a = jnp.exp(lf + cache.m - m_new)
+    bgt = jnp.exp(li - m_new)
+    c_new = (cache.c * a[..., None, None]
+             + bgt[..., None, None] * jnp.einsum("bhp,bhr->bhpr", k, v))
+    n_new = cache.n * a[..., None] + bgt[..., None] * k
+    num = jnp.einsum("bhp,bhpr->bhr", q, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", q, n_new)),
+                      jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(b, 1, d_in).astype(cd)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = dense(params["wdown"], y, cd)
+    return out, MLSTMCache(c=c_new, n=n_new, m=m_new, conv=conv_new)
+
+
+# ============================================================== sLSTM ====
+class SLSTMCache(NamedTuple):
+    c: jnp.ndarray  # (B, d)
+    n: jnp.ndarray  # (B, d)
+    h: jnp.ndarray  # (B, d)
+    m: jnp.ndarray  # (B, d)
+
+
+def slstm_init(key, cfg, d=None):
+    d = d or cfg.d_model
+    h = cfg.n_heads
+    ph = d // h
+    ks = jax.random.split(key, 3)
+    return {
+        "wx": dense_init(ks[0], d, 4 * d, True, cfg.pdtype),  # z i f o
+        "r": (jax.random.normal(ks[1], (4, h, ph, ph), jnp.float32)
+              * ph ** -0.5).astype(cfg.pdtype),
+        "norm": rmsnorm_init(d, cfg.pdtype),
+        "wdown": dense_init(ks[2], d, d, False, cfg.pdtype),
+    }
+
+
+def _slstm_cell(params, xw, state: SLSTMCache, cfg, d):
+    """One step. xw: precomputed Wx x + b, (B, 4d)."""
+    h_heads = cfg.n_heads
+    ph = d // h_heads
+    hprev = state.h.reshape(-1, h_heads, ph)
+    rh = jnp.einsum("ghpr,bhp->gbhr", params["r"].astype(jnp.float32),
+                    hprev.astype(jnp.float32)).reshape(4, -1, d)
+    pre = xw.astype(jnp.float32).reshape(-1, 4, d).transpose(1, 0, 2) + rh
+    zt = jnp.tanh(pre[0])
+    li = pre[1]                       # exp input gate (log space)
+    lf = jax.nn.log_sigmoid(pre[2])   # sigmoid forget in log space
+    ot = jax.nn.sigmoid(pre[3])
+    m_new = jnp.maximum(lf + state.m, li)
+    a = jnp.exp(lf + state.m - m_new)
+    bg = jnp.exp(li - m_new)
+    c_new = a * state.c + bg * zt
+    n_new = jnp.maximum(a * state.n + bg, jnp.exp(-m_new))
+    h_new = ot * c_new / n_new
+    return SLSTMCache(c=c_new, n=n_new, h=h_new, m=m_new)
+
+
+def slstm_cache_init(cfg, batch, d=None, dtype=jnp.float32) -> SLSTMCache:
+    d = d or cfg.d_model
+    z = jnp.zeros((batch, d), dtype)
+    return SLSTMCache(c=z, n=z + 1e-6, h=z, m=jnp.full((batch, d), -1e30,
+                                                       dtype))
+
+
+def slstm_forward(params, x, cfg, d=None):
+    """Sequential scan over T (sLSTM is inherently recurrent)."""
+    d = d or cfg.d_model
+    b, t, _ = x.shape
+    cd = cfg.cdtype
+    xw = dense(params["wx"], x, cd)  # (B, T, 4d)
+
+    def step(state, xw_t):
+        new = _slstm_cell(params, xw_t, state, cfg, d)
+        return new, new.h
+
+    state0 = slstm_cache_init(cfg, b, d)
+    _, hs = jax.lax.scan(step, state0, xw.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(cd)  # (B, T, d)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    return dense(params["wdown"], y, cd)
+
+
+def slstm_decode_step(params, x, cache: SLSTMCache, cfg, d=None):
+    cd = cfg.cdtype
+    d = d or cfg.d_model
+    xw = dense(params["wx"], x, cd)[:, 0]
+    new = _slstm_cell(params, xw, cache, cfg, d)
+    y = rmsnorm(params["norm"], new.h[:, None].astype(cd), cfg.norm_eps)
+    return dense(params["wdown"], y, cd), new

@@ -1,0 +1,2 @@
+"""Optimizers."""
+from repro.optim.adamw import AdamWConfig, OptState, global_norm, init, schedule, update

@@ -1,0 +1,111 @@
+"""AdamW with global-norm clipping, LR schedule, and TEDA-guard masking.
+
+Optimizer state is a pytree congruent with params, so it inherits the
+params' PartitionSpecs (ZeRO-1 flavor: FSDP-sharded params imply
+FSDP-sharded m/v — no optimizer-state replication). `apply_updates`
+takes a `skip` flag wired to the TEDAGuard verdict: a skipped step is a
+no-op on params AND state (count included), which is what makes
+guard-skipping equivalent to never having seen the batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    grad_dtype: str = "float32"  # bfloat16 => compressed grad accumulation
+    m_dtype: str = "float32"     # bfloat16 => halve first-moment storage
+    v_dtype: str = "float32"     # bfloat16 => halve second-moment storage
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    count: jnp.ndarray
+
+
+def init(params, cfg: "AdamWConfig | None" = None) -> OptState:
+    md = jnp.dtype(cfg.m_dtype) if cfg else jnp.float32
+    vd = jnp.dtype(cfg.v_dtype) if cfg else jnp.float32
+    return OptState(
+        m=jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, md), params),
+        v=jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, vd), params),
+        count=jnp.zeros((), jnp.int32))
+
+
+def schedule(cfg: AdamWConfig, step) -> jnp.ndarray:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                        for g in jax.tree_util.tree_leaves(tree)))
+
+
+def update(grads, state: OptState, params, cfg: AdamWConfig,
+           skip: jnp.ndarray | bool = False
+           ) -> Tuple[Any, OptState, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+        grads = jax.tree_util.tree_map(
+            lambda g: (g.astype(jnp.float32) * scale), grads)
+    else:
+        grads = jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32), grads)
+
+    count = state.count + 1
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+    lr = schedule(cfg, count)
+
+    md, vd = jnp.dtype(cfg.m_dtype), jnp.dtype(cfg.v_dtype)
+    new_m = jax.tree_util.tree_map(
+        lambda m, g: (cfg.b1 * m.astype(jnp.float32)
+                      + (1 - cfg.b1) * g).astype(md), state.m, grads)
+    new_v = jax.tree_util.tree_map(
+        lambda v, g: (cfg.b2 * v.astype(jnp.float32)
+                      + (1 - cfg.b2) * g * g).astype(vd), state.v, grads)
+
+    def step_one(p, m, v):
+        upd = (m.astype(jnp.float32) / b1c) / (
+            jnp.sqrt(v.astype(jnp.float32) / b2c) + cfg.eps)
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(step_one, params, new_m, new_v)
+
+    # TEDA-guard masking: skipped step == unseen batch
+    skip = jnp.asarray(skip)
+    sel = lambda n, o: jnp.where(skip, o, n)
+    new_params = jax.tree_util.tree_map(sel, new_params, params)
+    new_m = jax.tree_util.tree_map(sel, new_m, state.m)
+    new_v = jax.tree_util.tree_map(sel, new_v, state.v)
+    new_count = jnp.where(skip, state.count, count)
+
+    metrics = {"grad_norm": gnorm, "lr": lr,
+               "skipped": skip.astype(jnp.float32)}
+    return new_params, OptState(m=new_m, v=new_v, count=new_count), metrics

@@ -1,0 +1,75 @@
+"""Activation-sharding hints (Megatron-style sequence parallelism).
+
+GSPMD propagates parameter shardings, but the residual stream (B, S, D)
+defaults to batch-only sharding — replicated across the `model` axis,
+which blows up saved activations at 34B/132B scale (DESIGN.md §5). The
+fix is a with_sharding_constraint on the residual between blocks:
+sequence over "model" outside attention/MLP; GSPMD inserts the
+all-gather / reduce-scatter pair around the TP regions automatically.
+
+Model code stays mesh-agnostic: it calls `maybe_shard(x, "residual")`,
+which is a no-op unless the launcher installed a context via
+`activation_hints(mesh, sp=...)` (contextvar, trace-time).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "activation_hints", default=None)
+
+
+class _Hints:
+    def __init__(self, mesh: Mesh, sp: bool, dp: tuple):
+        self.mesh, self.sp, self.dp = mesh, sp, dp
+
+
+@contextlib.contextmanager
+def activation_hints(mesh: Mesh, sp: bool = True):
+    from repro.sharding.rules import dp_axes
+    tok = _CTX.set(_Hints(mesh, sp, dp_axes(mesh)))
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def sp_enabled() -> bool:
+    h = _CTX.get()
+    return bool(h and h.sp)
+
+
+def _msize(mesh: Mesh) -> int:
+    return dict(mesh.shape).get("model", 1)
+
+
+def maybe_shard(x, kind: str = "residual"):
+    """Apply the activation constraint for `kind` if hints are active."""
+    h: Optional[_Hints] = _CTX.get()
+    if h is None:
+        return x
+    if kind == "residual" and x.ndim == 3:
+        b, s, _ = x.shape
+        sizes = dict(h.mesh.shape)
+        msz = _msize(h.mesh)
+        dp_total = 1
+        for a in h.dp:
+            dp_total *= sizes[a]
+        if dp_total > 1 and b % dp_total == 0:
+            bspec = h.dp
+        elif b % sizes.get("data", 1) == 0 and sizes.get("data", 1) > 1:
+            bspec = "data"
+        else:
+            bspec = None
+        if h.sp and s % msz == 0 and s > msz:
+            spec = P(bspec, "model", None)
+        else:
+            spec = P(bspec, None, None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(h.mesh, spec))
+    return x

@@ -1,0 +1,62 @@
+"""TEDA data clouds (evolving classifier, paper refs [4]/[15])."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.clouds import clouds_init, clouds_run, clouds_step
+
+
+def _blobs(per=60, seed=0):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(per, 2)) * 0.15 + np.array([0.0, 0.0])
+    b = rng.normal(size=(per, 2)) * 0.15 + np.array([5.0, 5.0])
+    c = rng.normal(size=(per, 2)) * 0.15 + np.array([-5.0, 5.0])
+    # sequential regimes (the TEDAClass streaming scenario: concept
+    # drift with each regime lasting > m^2 samples)
+    x = np.concatenate([a, b, c], axis=0)
+    labels = np.repeat(np.array([0, 1, 2]), per)
+    return x.astype(np.float32), labels
+
+
+def test_three_blobs_three_clouds():
+    x, labels = _blobs()
+    state, member = clouds_run(jnp.asarray(x), capacity=8, m=3.0)
+    assert int(state.n_active) == 3
+    member = np.asarray(member)
+    # each sample belongs to exactly its blob's cloud (after warmup)
+    owner = member.argmax(axis=1)
+    # map blob label -> majority cloud; check purity
+    purity = 0
+    for lbl in range(3):
+        own = owner[labels == lbl][10:]
+        purity += (own == np.bincount(own).argmax()).mean()
+    assert purity / 3 > 0.95
+    # cloud means recover blob centers
+    centers = np.asarray(state.mean)[np.asarray(state.k) > 0]
+    found = sorted(tuple(np.round(c).tolist()) for c in centers)
+    assert found == [(-5.0, 5.0), (0.0, 0.0), (5.0, 5.0)]
+
+
+def test_capacity_saturation_adopts():
+    """At capacity, eccentric samples join the least-eccentric cloud."""
+    x, _ = _blobs(per=30)
+    state, member = clouds_run(jnp.asarray(x), capacity=2, m=3.0)
+    assert int(state.n_active) == 2
+    assert bool(np.asarray(member).any(axis=1).all())  # nobody dropped
+
+
+def test_single_cloud_for_stationary_stream():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(200, 3)).astype(np.float32) * 0.1
+    state, _ = clouds_run(jnp.asarray(x), capacity=8, m=3.0)
+    assert int(state.n_active) == 1
+    np.testing.assert_allclose(np.asarray(state.mean[0]), x.mean(0),
+                               atol=1e-4)
+
+
+def test_step_is_jittable():
+    state = clouds_init(4, 2)
+    step = jax.jit(lambda s, v: clouds_step(s, v, 3.0))
+    state, member = step(state, jnp.asarray([1.0, 2.0]))
+    assert int(state.n_active) == 1
+    assert member.shape == (4,)

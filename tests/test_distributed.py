@@ -1,0 +1,44 @@
+"""Distributed (shard_map) TEDA — runs in a subprocess with 8 host devices.
+
+The main pytest process must keep seeing 1 device (smoke tests), so the
+multi-device check sets XLA_FLAGS in a child interpreter.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core.distributed import distributed_teda
+    from repro.core.teda import teda_numpy_loop
+
+    mesh = jax.make_mesh((8,), ("data",))
+    rng = np.random.default_rng(42)
+    x = rng.normal(size=(1024, 4)).astype(np.float32)
+    x[700:720] += 6.0
+    ref = teda_numpy_loop(x, 3.0)
+    fin, out = distributed_teda(jnp.asarray(x), 3.0, mesh)
+    assert np.abs(np.asarray(out.ecc) - ref["ecc"]).max() < 1e-4
+    assert (np.asarray(out.outlier) != ref["outlier"]).sum() == 0
+    assert abs(float(fin.k) - 1024.0) < 1e-6
+    assert np.abs(np.asarray(fin.mean) - ref["mean"]).max() < 1e-5
+    assert ref["outlier"][700:720].sum() > 0
+    print("DIST_OK")
+""")
+
+
+@pytest.mark.slow
+def test_distributed_teda_8dev():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    res = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stderr
+    assert "DIST_OK" in res.stdout

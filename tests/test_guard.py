@@ -1,0 +1,76 @@
+"""TEDAGuard: training-loop anomaly guard + straggler detector."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (GuardConfig, StragglerDetector, apply_guard,
+                        guard_init, guard_step)
+
+
+def _run_guard(metric_stream, cfg):
+    gs = guard_init(cfg)
+    skips = []
+    for row in metric_stream:
+        gs, verdict = guard_step(gs, jnp.asarray(row, jnp.float32), cfg)
+        skips.append(bool(verdict.skip))
+    return gs, np.asarray(skips)
+
+
+def test_guard_skips_loss_spike():
+    rng = np.random.default_rng(0)
+    loss = 2.0 + 0.05 * rng.normal(size=100)
+    gnorm = 1.0 + 0.02 * rng.normal(size=100)
+    loss[70] = 40.0  # corrupt batch
+    gs, skips = _run_guard(np.stack([loss, gnorm], -1),
+                           GuardConfig(m=3.0, warmup_steps=20))
+    assert skips[70]
+    assert skips[:20].sum() == 0  # warmup never skips
+    assert int(gs.skipped) == skips.sum()
+
+
+def test_guard_nan_always_skips():
+    rng = np.random.default_rng(1)
+    loss = 2.0 + 0.05 * rng.normal(size=50)
+    loss[40] = np.nan
+    gnorm = np.ones(50)
+    _, skips = _run_guard(np.stack([loss, gnorm], -1),
+                          GuardConfig(m=3.0, warmup_steps=10))
+    assert skips[40]
+
+
+def test_exclude_outliers_keeps_spike_train_detectable():
+    """A run of spikes: exclusion prevents stat contamination."""
+    rng = np.random.default_rng(2)
+    loss = 2.0 + 0.05 * rng.normal(size=120)
+    loss[80:100] = 30.0
+    gnorm = np.ones(120)
+    stream = np.stack([loss, gnorm], -1)
+    _, sk_ex = _run_guard(stream, GuardConfig(m=3.0, warmup_steps=20,
+                                              exclude_outliers=True))
+    assert sk_ex[80:100].sum() >= 18  # nearly every spike caught
+
+
+def test_apply_guard_masks_pytree():
+    old = {"w": jnp.zeros(3), "b": jnp.zeros(())}
+    new = {"w": jnp.ones(3), "b": jnp.ones(())}
+    kept = apply_guard(jnp.asarray(True), new, old)
+    np.testing.assert_allclose(kept["w"], 0.0)
+    taken = apply_guard(jnp.asarray(False), new, old)
+    np.testing.assert_allclose(taken["w"], 1.0)
+
+
+def test_guard_step_is_jittable():
+    cfg = GuardConfig()
+    gs = guard_init(cfg)
+    f = jax.jit(lambda s, m: guard_step(s, m, cfg))
+    gs2, v = f(gs, jnp.asarray([1.0, 2.0]))
+    assert gs2.teda.k.shape == (2,)
+    assert v.skip.dtype == bool
+
+
+def test_straggler_detector():
+    det = StragglerDetector(m=3.0, warmup=10)
+    rng = np.random.default_rng(3)
+    trips = [det.check(1.0 + 0.01 * rng.normal()) for _ in range(50)]
+    assert not any(trips)
+    assert det.check(5.0)  # straggling step

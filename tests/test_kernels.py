@@ -1,0 +1,134 @@
+"""Pallas TEDA kernel: shape/dtype sweeps + property tests vs ref.py."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.teda import TedaState
+from repro.kernels.ops import teda_scan_tpu
+from repro.kernels.ref import teda_ref
+
+
+def _x(t, c, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(t, c)).astype(dtype)
+
+
+def _check(x, m=3.0, block_t=64, state=None, k0=0, sum0=None, var0=None,
+           rtol=5e-4):
+    ref = teda_ref(np.asarray(x, np.float32), m, k0=k0, sum0=sum0, var0=var0)
+    fin, out = teda_scan_tpu(jnp.asarray(x), m, state=state, block_t=block_t)
+    np.testing.assert_allclose(np.asarray(out["mean"]), ref["mean"],
+                               rtol=rtol, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out["var"]), ref["var"],
+                               rtol=rtol, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out["ecc"]), ref["ecc"],
+                               rtol=rtol, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(out["outlier"]), ref["outlier"])
+    return fin, out
+
+
+# ----------------------------------------------------------- shape sweeps
+@pytest.mark.parametrize("t", [8, 64, 100, 256, 1000])
+@pytest.mark.parametrize("c", [1, 3, 128, 200])
+def test_shapes(t, c):
+    _check(_x(t, c, seed=t * 1000 + c))
+
+
+@pytest.mark.parametrize("block_t", [8, 32, 64, 256, 512])
+def test_block_sizes(block_t):
+    """Chunking must not change results (carry correctness)."""
+    x = _x(777, 5, seed=11)
+    _check(x, block_t=block_t)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16, np.float16])
+def test_dtypes(dtype):
+    x = _x(256, 4, seed=12).astype(dtype)
+    # low-precision inputs are up-cast in-kernel; compare vs f32 ref loosely
+    ref = teda_ref(np.asarray(x, np.float32), 3.0)
+    _, out = teda_scan_tpu(jnp.asarray(x), 3.0, block_t=64)
+    np.testing.assert_allclose(np.asarray(out["ecc"]), ref["ecc"],
+                               rtol=2e-2, atol=1e-3)
+
+
+def test_state_carry_across_calls():
+    """Two chunked kernel calls == one call (streaming restart)."""
+    x = _x(512, 3, seed=13)
+    full_fin, full = teda_scan_tpu(jnp.asarray(x), block_t=64)
+    st1, _ = teda_scan_tpu(jnp.asarray(x[:256]), block_t=64)
+    st2, out2 = teda_scan_tpu(jnp.asarray(x[256:]), state=st1, block_t=64)
+    np.testing.assert_allclose(np.asarray(out2["ecc"]),
+                               np.asarray(full["ecc"])[256:], rtol=1e-4,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(st2.var),
+                               np.asarray(full_fin.var), rtol=1e-4)
+
+
+def test_spike_detection_per_channel():
+    x = _x(400, 4, seed=14)
+    x[300:305, 2] += 25.0
+    _, out = teda_scan_tpu(jnp.asarray(x), 3.0)
+    flags = np.asarray(out["outlier"])
+    assert flags[300:305, 2].any()
+    assert not flags[300:305, [0, 1, 3]].any()
+
+
+def test_padding_rows_do_not_leak():
+    """T not a multiple of block_t: padded rows must not alter outputs."""
+    x = _x(70, 2, seed=15)
+    fin_a, out_a = teda_scan_tpu(jnp.asarray(x), block_t=64)
+    fin_b, out_b = teda_scan_tpu(jnp.asarray(x), block_t=8)
+    np.testing.assert_allclose(np.asarray(out_a["ecc"]),
+                               np.asarray(out_b["ecc"]), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(fin_a.var), np.asarray(fin_b.var),
+                               rtol=1e-5)
+
+
+# ------------------------------------------------------------- properties
+@settings(max_examples=20, deadline=None)
+@given(t=st.integers(2, 300), c=st.integers(1, 9),
+       seed=st.integers(0, 2 ** 16), m=st.floats(1.0, 5.0),
+       block_t=st.sampled_from([8, 32, 128]))
+def test_property_kernel_matches_ref(t, c, seed, m, block_t):
+    _check(_x(t, c, seed=seed), m=m, block_t=block_t)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_property_outliers_subset_of_high_zeta(seed):
+    """Verdict consistency: outlier ⇒ zeta > threshold (eq 6)."""
+    x = _x(200, 3, seed=seed)
+    x[150] += 30
+    _, out = teda_scan_tpu(jnp.asarray(x), 3.0)
+    fl = np.asarray(out["outlier"])
+    margin = np.asarray(out["zeta"]) - np.asarray(out["threshold"])
+    assert np.all(margin[fl] > 0)
+
+
+def test_verdict_only_kernel_matches_full():
+    from repro.kernels.ops import teda_scan_verdict
+    x = _x(512, 5, seed=21)
+    x[400:404, 2] += 20.0
+    fin_full, full = teda_scan_tpu(jnp.asarray(x), 3.0, block_t=64)
+    fin_v, slim = teda_scan_verdict(jnp.asarray(x), 3.0, block_t=64)
+    np.testing.assert_allclose(np.asarray(slim["ecc"]),
+                               np.asarray(full["ecc"]), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(slim["outlier"]),
+                                  np.asarray(full["outlier"]))
+    assert fin_v is not None  # 512 % 64 == 0 -> state available
+    np.testing.assert_allclose(np.asarray(fin_v.var),
+                               np.asarray(fin_full.var), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(fin_v.mean),
+                               np.asarray(fin_full.mean), rtol=1e-5)
+
+
+def test_verdict_only_state_carry():
+    from repro.kernels.ops import teda_scan_verdict
+    x = _x(256, 3, seed=22)
+    st1, _ = teda_scan_verdict(jnp.asarray(x[:128]), block_t=64)
+    _, out2 = teda_scan_verdict(jnp.asarray(x[128:]), state=st1,
+                                block_t=64)
+    _, full = teda_scan_tpu(jnp.asarray(x), block_t=64)
+    np.testing.assert_allclose(np.asarray(out2["ecc"]),
+                               np.asarray(full["ecc"])[128:], rtol=1e-4)
