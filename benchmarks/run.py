@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV. Tables:
   Table 3             -> bench_occupation (graph/VMEM occupation)
   Table 4             -> bench_throughput (processing time / SPS)
   Table 5             -> bench_platforms  (speedup vs software loop)
+  Bit-accurate sim    -> bench_bitaccurate (Q-format word-length sweep)
 
 The roofline/dry-run tables (EXPERIMENTS.md §Roofline) are produced by
 ``python -m repro.launch.dryrun`` + ``benchmarks/roofline.py`` (they need
@@ -17,16 +18,20 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_detection, bench_occupation,
-                            bench_platforms, bench_throughput)
+    import importlib
+
     failed = []
-    for mod in (bench_detection, bench_occupation, bench_throughput,
-                bench_platforms):
+    for name in ("bench_detection", "bench_occupation",
+                 "bench_throughput", "bench_platforms",
+                 "bench_bitaccurate"):
+        # import inside the loop: one broken benchmark (or its deps)
+        # must not keep the others from running
         try:
+            mod = importlib.import_module(f"benchmarks.{name}")
             mod.main()
             sys.stdout.flush()
         except Exception:
-            failed.append(mod.__name__)
+            failed.append(name)
             traceback.print_exc()
     if failed:
         raise SystemExit(f"benchmarks failed: {failed}")

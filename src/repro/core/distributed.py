@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.teda import TedaOutput, TedaState, teda_threshold
+from repro.sharding.rules import shard_map_compat
 
 __all__ = ["distributed_teda", "make_distributed_teda"]
 
@@ -30,12 +31,14 @@ def _local_shard_scan(x: jnp.ndarray, m, axis_name: str
     """Body run per-device under shard_map. x: (T_local, N)."""
     t_local = x.shape[0]
     idx = jax.lax.axis_index(axis_name)
-    ndev = jax.lax.axis_size(axis_name)
     x = x.astype(jnp.float32)
 
     # ---- pass 1: exclusive prefix of running sums -----------------------
     local_sum = jnp.sum(x, axis=0)  # (N,)
     all_sums = jax.lax.all_gather(local_sum, axis_name)  # (D, N)
+    # static device count from the gathered shape (jax.lax.axis_size is
+    # not available on older JAX)
+    ndev = all_sums.shape[0]
     prefix_mask = (jnp.arange(ndev) < idx).astype(x.dtype)  # exclusive
     s_prev = jnp.einsum("d,dn->n", prefix_mask, all_sums)
     k_prev = idx * t_local  # static per-device sample offset
@@ -116,12 +119,12 @@ def make_distributed_teda(mesh: Mesh, axis_name: str = "data"):
     state (every device ends with the full-stream statistics).
     """
     body = functools.partial(_local_shard_scan, axis_name=axis_name)
-    mapped = jax.shard_map(
+    mapped = shard_map_compat(
         body, mesh=mesh,
         in_specs=(P(axis_name, None), P()),
         out_specs=(TedaState(k=P(), mean=P(), var=P()),
                    TedaOutput(*([P(axis_name)] * 6))),
-        check_vma=False,
+        check=False,
     )
     x_sh = NamedSharding(mesh, P(axis_name, None))
     m_sh = NamedSharding(mesh, P())

@@ -1,0 +1,28 @@
+"""Bit-accurate fixed-point emulation of the paper's FPGA datapath.
+
+The paper's central validation artifact is a *bit-accurate simulation* of
+the Virtex-6 fixed-point pipeline (MEAN / VARIANCE / ECCENTRICITY /
+OUTLIER modules).  This package re-expresses Algorithm 1 entirely in
+Q-format integer arithmetic on int32 so the same results can be
+reproduced — and swept over word lengths — inside JAX:
+
+  qformat.py  QFormat spec + saturating add/sub/mul and the
+              shift-subtract divider (all int32/uint32, Pallas-safe)
+  teda_q.py   Algorithm 1 in Q-format ops, lax.scan stream driver
+  analysis.py word-length sweep vs the float64 oracle
+
+The integer Pallas kernel lives in `repro.kernels.teda_q_scan` (wrapped
+by `repro.kernels.ops.teda_q_scan_tpu`) and is bit-exact with
+`teda_q.teda_q_scan_chan` by construction (shared step function).
+"""
+from repro.fixedpoint.qformat import (QFormat, div_qi, div_qq, sat_add,
+                                      sat_sub, sat_mul)
+from repro.fixedpoint.teda_q import (teda_q_init, teda_q_step,
+                                     teda_q_stream, teda_q_scan_chan)
+from repro.fixedpoint.analysis import evaluate_format, wordlength_sweep
+
+__all__ = [
+    "QFormat", "sat_add", "sat_sub", "sat_mul", "div_qq", "div_qi",
+    "teda_q_init", "teda_q_step", "teda_q_stream", "teda_q_scan_chan",
+    "evaluate_format", "wordlength_sweep",
+]

@@ -1,0 +1,254 @@
+"""Q-format fixed-point arithmetic emulating the paper's FPGA datapath.
+
+A `QFormat(word_len, frac_len)` value is a signed two's-complement
+integer of `word_len` bits with `frac_len` fractional bits, held in an
+int32 lane.  All operators reproduce what the synthesized datapath does:
+
+  * saturating add/sub — adder with overflow clamp (symmetric range
+    [-(2^(WL-1)-1), 2^(WL-1)-1], the DSP-slice convention that keeps
+    |qmin| negatable)
+  * `sat_mul` — full 2*WL-bit product (built from 16-bit partial
+    products, i.e. exactly the DSP48 cascade), then >> FL with
+    truncation-toward-zero (or round-half-away) and saturation
+  * `div_qq` / `div_qi` — bit-serial shift-subtract (restoring) divider:
+    one quotient bit per clock, the architecture the paper's divider
+    module synthesizes to.  The wide dividend `num << FL` is never
+    materialized; its bits are streamed MSB-first like hardware does.
+
+Everything is int32/uint32 + shifts + compares, so the same functions
+trace inside the Pallas TPU kernel (`repro.kernels.teda_q_scan`) and in
+plain `lax.scan` — which is what makes the kernel bit-exact with the
+pure-JAX reference by construction.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["QFormat", "sat", "sat_add", "sat_sub", "sat_mul",
+           "div_qq", "div_qi"]
+
+_U32 = jnp.uint32
+_I32 = jnp.int32
+
+
+class QFormat(NamedTuple):
+    """Fixed-point spec: `word_len` total bits, `frac_len` fractional.
+
+    `rounding` is the post-shift policy of mul/div: "trunc" (toward
+    zero, the cheap hardware default) or "round" (half away from zero).
+    Hashable, so it can be a static jit argument.
+    """
+
+    word_len: int = 32
+    frac_len: int = 16
+    rounding: str = "trunc"
+
+    @property
+    def int_len(self) -> int:
+        return self.word_len - 1 - self.frac_len
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.word_len - 1)) - 1
+
+    @property
+    def qmin(self) -> int:
+        return -self.qmax  # symmetric saturation
+
+    @property
+    def one(self) -> int:
+        """Raw representation of 1.0 (may exceed qmax when FL=WL-1)."""
+        return 1 << self.frac_len
+
+    @property
+    def scale(self) -> float:
+        return float(1 << self.frac_len)
+
+    @property
+    def resolution(self) -> float:
+        return 1.0 / self.scale
+
+    def validate(self) -> "QFormat":
+        if not (2 <= self.word_len <= 32):
+            raise ValueError(f"word_len {self.word_len} not in [2, 32]")
+        if not (0 <= self.frac_len <= min(self.word_len - 1, 30)):
+            raise ValueError(
+                f"frac_len {self.frac_len} not in [0, "
+                f"{min(self.word_len - 1, 30)}] for word_len "
+                f"{self.word_len}")
+        if self.rounding not in ("trunc", "round"):
+            raise ValueError(f"rounding {self.rounding!r}")
+        return self
+
+    def quantize(self, x) -> jnp.ndarray:
+        """Float -> Q (round-to-nearest ADC front-end, saturating).
+
+        The clamp happens in the integer domain: float32 cannot
+        represent qmin/qmax exactly at word_len=32 (a float clip would
+        emit -2^31, outside the symmetric format and every Q op's
+        |v| < 2^31 contract).
+        """
+        v = jnp.round(jnp.asarray(x, jnp.float32) * self.scale)
+        v = jnp.where(jnp.isnan(v), 0.0, v)
+        # float->int32 convert saturates out-of-range values in XLA
+        return jnp.clip(v.astype(_I32), self.qmin, self.qmax)
+
+    def quantize_scalar(self, x: float) -> int:
+        """Exact host-side quantization of a Python float constant."""
+        v = int(round(float(x) * self.scale))
+        return max(self.qmin, min(self.qmax, v))
+
+    def dequantize(self, q) -> jnp.ndarray:
+        return jnp.asarray(q, jnp.float32) / self.scale
+
+    def dequantize_np(self, q) -> np.ndarray:
+        """Exact float64 dequantization for analysis/oracle comparison."""
+        return np.asarray(q, np.float64) / self.scale
+
+    def label(self) -> str:
+        return f"Q{self.int_len}.{self.frac_len}(wl={self.word_len})"
+
+
+# --------------------------------------------------------------- add/sub
+def sat(fmt: QFormat, v: jnp.ndarray) -> jnp.ndarray:
+    """Clamp an int32 value into the WL-bit symmetric range."""
+    return jnp.clip(v, fmt.qmin, fmt.qmax).astype(_I32)
+
+
+def sat_add(fmt: QFormat, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Saturating Q + Q.  Operands must already be in-format."""
+    a = a.astype(_I32)
+    b = b.astype(_I32)
+    s = a + b  # may wrap only when word_len == 32
+    same_sign = (a >= 0) == (b >= 0)
+    wrapped = same_sign & ((s >= 0) != (a >= 0))
+    ext = jnp.where(a >= 0, fmt.qmax, fmt.qmin).astype(_I32)
+    return jnp.where(wrapped, ext, sat(fmt, s))
+
+
+def sat_sub(fmt: QFormat, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    # symmetric range: -b never overflows
+    return sat_add(fmt, a, -jnp.asarray(b, _I32))
+
+
+# -------------------------------------------------------------- multiply
+def _mul_wide(ua: jnp.ndarray, ub: jnp.ndarray):
+    """Exact 64-bit product of uint32 magnitudes (< 2^31) as (hi, lo).
+
+    Four 16x16 partial products — literally the DSP48 decomposition the
+    FPGA multiplier uses.  Every intermediate fits in uint32.
+    """
+    al, ah = ua & 0xFFFF, ua >> 16            # ah < 2^15
+    bl, bh = ub & 0xFFFF, ub >> 16
+    ll = al * bl                              # < 2^32, exact in uint32
+    lh = al * bh                              # < 2^31
+    hl = ah * bl                              # < 2^31
+    hh = ah * bh                              # < 2^30
+    t = (ll >> 16) + (lh & 0xFFFF) + (hl & 0xFFFF)   # < 3*2^16
+    lo = (ll & 0xFFFF) | ((t & 0xFFFF) << 16)
+    hi = hh + (lh >> 16) + (hl >> 16) + (t >> 16)
+    return hi, lo
+
+
+def sat_mul(fmt: QFormat, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Saturating Q * Q -> Q: full product, >> FL, round/trunc, clamp."""
+    a = jnp.asarray(a, _I32)
+    b = jnp.asarray(b, _I32)
+    a, b = jnp.broadcast_arrays(a, b)
+    neg = (a < 0) != (b < 0)
+    ua = jnp.abs(a).astype(_U32)
+    ub = jnp.abs(b).astype(_U32)
+    hi, lo = _mul_wide(ua, ub)
+    fl = fmt.frac_len
+    if fmt.rounding == "round" and fl > 0:
+        add = _U32(1 << (fl - 1))
+        lo2 = lo + add
+        hi = hi + (lo2 < lo).astype(_U32)
+        lo = lo2
+    # saturate iff product >= 2^(WL-1+FL)  (i.e. (P >> FL) > qmax)
+    p_star = fmt.word_len - 1 + fl
+    if p_star >= 32:
+        over = hi >= _U32(1 << (p_star - 32))
+    else:
+        over = (hi > 0) | (lo >= _U32(1 << p_star))
+    if fl == 0:
+        q = lo
+    else:
+        q = (lo >> _U32(fl)) | (hi << _U32(32 - fl))
+    q = jnp.where(over, _U32(fmt.qmax), q).astype(_I32)
+    return jnp.where(neg, -q, q)
+
+
+# ---------------------------------------------------------------- divide
+def _div_mag(n: jnp.ndarray, d: jnp.ndarray, shift: int,
+             rounding: str, qmax: int):
+    """floor((n << shift) / d) on uint32 magnitudes, bit-serial.
+
+    Restoring shift-subtract long division, one quotient bit per
+    iteration (= per divider clock on the FPGA).  The (31+shift)-bit
+    dividend is never materialized: bit i of (n << shift) is bit
+    (i - shift) of n, streamed MSB-first.  d == 0 saturates to qmax
+    (every trial subtraction succeeds), matching a guard-free divider.
+    Returns the quotient already saturated to [0, qmax].
+    """
+    n, d = jnp.broadcast_arrays(n, d)
+    nbits = 31 + shift  # dividend width; n < 2^31
+
+    def body(j, carry):
+        r, q, lost = carry
+        # dividend bit at position nbits-1-j  ==  bit (30 - j) of n
+        sh = jnp.maximum(30 - j, 0).astype(_U32)
+        bit = jnp.where(j <= 30, (n >> sh) & _U32(1), _U32(0))
+        lost = lost | (r >> _U32(31))
+        r = (r << _U32(1)) | bit
+        ge = r >= d
+        lost = lost | (q >> _U32(31))
+        q = (q << _U32(1)) | ge.astype(_U32)
+        r = jnp.where(ge, r - d, r)
+        return r, q, lost
+
+    zero = jnp.zeros_like(n)
+    r, q, lost = jax.lax.fori_loop(0, nbits, body, (zero, zero, zero))
+    if rounding == "round":
+        half_up = (r >= (d >> _U32(1)) + (d & _U32(1))) & (d > 0)
+        q2 = q + half_up.astype(_U32)
+        lost = lost | ((q2 < q).astype(_U32))
+        q = q2
+    return jnp.where((lost > 0) | (q > _U32(qmax)), _U32(qmax), q)
+
+
+def div_qq(fmt: QFormat, num: jnp.ndarray, den: jnp.ndarray) -> jnp.ndarray:
+    """Saturating Q / Q -> Q: computes (num << FL) / den bit-serially.
+
+    Also correct for raw-integer operand pairs in the *same* implicit
+    format (e.g. the counters (k-1, k): (k-1)<<FL / k is exactly the
+    Q-representation of (k-1)/k).
+    """
+    num = jnp.asarray(num, _I32)
+    den = jnp.asarray(den, _I32)
+    num, den = jnp.broadcast_arrays(num, den)
+    neg = (num < 0) != (den < 0)
+    q = _div_mag(jnp.abs(num).astype(_U32), jnp.abs(den).astype(_U32),
+                 fmt.frac_len, fmt.rounding, fmt.qmax)
+    q = q.astype(_I32)
+    return jnp.where(neg, -q, q)
+
+
+def div_qi(fmt: QFormat, num: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Saturating Q / int -> Q (no FL pre-shift: (X/2^FL)/k = (X/k)/2^FL).
+
+    This is the divider configuration the pipeline uses for all
+    divisions by the sample counter k.
+    """
+    num = jnp.asarray(num, _I32)
+    k = jnp.asarray(k, _I32)
+    num, k = jnp.broadcast_arrays(num, k)
+    neg = (num < 0) != (k < 0)
+    q = _div_mag(jnp.abs(num).astype(_U32), jnp.abs(k).astype(_U32),
+                 0, fmt.rounding, fmt.qmax)
+    q = q.astype(_I32)
+    return jnp.where(neg, -q, q)

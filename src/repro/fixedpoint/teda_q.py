@@ -1,0 +1,243 @@
+"""Algorithm 1 re-expressed in Q-format integer arithmetic.
+
+Mirrors the paper's four pipeline modules on the quantized datapath:
+
+  MEAN         mu_k  = (k-1)/k * mu_{k-1} + x_k / k          eq (2)
+  VARIANCE     var_k = (k-1)/k * var_{k-1} + ||x-mu||^2 / k  eq (3)
+  ECCENTRICITY ecc_k = 1/k + (d2 / var) / k                  eq (1)
+  OUTLIER      ecc/2 > (m^2+1) / (2k)                        eqs (5)(6)
+
+All quantities are int32 Q-values of one `QFormat`; the sample counter k
+stays a plain integer (the FPGA's counter register).  Division by k uses
+the integer-divisor configuration `div_qi`; the two Q/Q quotients
+((k-1)/k and d2/var) use the shift-subtract divider `div_qq`.  `zeta` is
+a 1-bit arithmetic right shift — free wiring in hardware.
+
+Two drivers:
+  * `teda_q_stream`    — multivariate (T, ..., N) streams, returns the
+    same `TedaState`/`TedaOutput` contract as `core/teda.py`, with Q
+    int32 payloads (dequantize with `QFormat.dequantize`).
+  * `teda_q_scan_chan` — (T, C) univariate-channel layout, a `lax.scan`
+    over exactly the `_q_step_u` the Pallas kernel runs, making the
+    kernel bit-exact with this function by construction.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.teda import TedaOutput, TedaState
+from repro.fixedpoint.qformat import (QFormat, div_qi, div_qq, sat,
+                                      sat_add, sat_mul, sat_sub)
+
+__all__ = ["teda_q_init", "teda_q_step", "teda_q_stream",
+           "teda_q_scan_chan", "msq1_const"]
+
+_I32 = jnp.int32
+
+
+def msq1_const(fmt: QFormat, m):
+    """The OUTLIER module's ROM constant: quantized m^2 + 1.
+
+    Saturates when m^2+1 exceeds the integer range of the format (e.g.
+    m=3 needs 4 integer bits) — faithfully degrading detection, which is
+    exactly what the word-length sweep measures.  Python scalars are
+    quantized exactly on the host; traced arrays through the format's
+    (float32) quantizer, so m stays jit-compatible.
+    """
+    if isinstance(m, (int, float)):
+        return fmt.quantize_scalar(float(m) * float(m) + 1.0)
+    m = jnp.asarray(m, jnp.float32)
+    return fmt.quantize(m * m + 1.0)
+
+
+def teda_q_init(batch_shape: Tuple[int, ...] = (), n_features: int = 1
+                ) -> TedaState:
+    """Fresh Q-state: k=0, mu=0, var=0 (all int32)."""
+    return TedaState(
+        k=jnp.zeros(batch_shape, _I32),
+        mean=jnp.zeros(batch_shape + (n_features,), _I32),
+        var=jnp.zeros(batch_shape, _I32),
+    )
+
+
+def _q_counter_terms(fmt: QFormat, k, msq1):
+    """The three dividers that depend only on the counter k:
+    rk=(k-1)/k, inv_k=1/k, thr=(m^2+1)/(2k).
+
+    Data-independent, so drivers precompute them vectorized over all T
+    instants instead of re-running three 31..61-cycle bit-serial
+    divisions inside every sequential step — bit-identical values (same
+    function, same inputs), ~4x less divider work on the critical path
+    (only the d2/var divide is data-dependent).
+    """
+    k = jnp.asarray(k, _I32)
+    rk = div_qq(fmt, k - 1, k)
+    inv_k = div_qi(fmt, jnp.broadcast_to(_I32(fmt.one), k.shape), k)
+    thr = div_qi(fmt, jnp.broadcast_to(jnp.asarray(msq1, _I32), k.shape),
+                 2 * k)
+    return rk, inv_k, thr
+
+
+def _q_mean_update(fmt: QFormat, first, rk, k, mean_prev, xq):
+    """MEAN module, eq (2): (k-1)/k * mu + x/k with the k=1 override.
+
+    `first`, `rk`, `k` must already be broadcast-ready against the data
+    (the multivariate driver passes them with a trailing feature axis).
+    """
+    return jnp.where(first, xq,
+                     sat_add(fmt, sat_mul(fmt, rk, mean_prev),
+                             div_qi(fmt, xq, k)))
+
+
+def _q_post_d2(fmt: QFormat, k, first, terms, d2, var_prev):
+    """VARIANCE + ECCENTRICITY + OUTLIER modules from a reduced d2.
+
+    Single implementation of eqs (3), (1), (5), (6) in Q arithmetic,
+    shared by the univariate and multivariate steps — one fix location
+    for guards/gates, preserving the bit-exactness story.  `terms` is
+    the `_q_counter_terms` triple for this instant.
+    Returns (var', ecc, zeta, thr, outlier).
+    """
+    rk, inv_k, thr = terms
+    var_n = jnp.where(first, 0,
+                      sat_add(fmt, sat_mul(fmt, rk, var_prev),
+                              div_qi(fmt, d2, k)))
+
+    # ECCENTRICITY: 1/k + (d2/var)/k, var>0 guard as in the float path
+    safe = var_n > 0
+    ratio = div_qq(fmt, d2, jnp.where(safe, var_n, 1))
+    ecc = sat_add(fmt, inv_k, jnp.where(safe, div_qi(fmt, ratio, k), 0))
+
+    # OUTLIER: zeta = ecc >> 1 (free in hardware), thr = (m^2+1)/(2k)
+    zeta = ecc >> 1
+    outlier = (zeta > thr) & (k >= 2)
+    return var_n, ecc, zeta, thr, outlier
+
+
+def _q_step_u(fmt: QFormat, k, mean, var, xq, msq1, terms=None):
+    """One univariate Q-TEDA step on arrays of identical shape.
+
+    k is the (already incremented) integer instant — scalar or array,
+    broadcast against the data.  Single source of truth shared by the
+    `lax.scan` driver and the Pallas kernel (bit-exactness guarantee).
+    `terms` lets drivers pass precomputed `_q_counter_terms`.
+    Returns (mean', var', ecc, zeta, thr, outlier).
+    """
+    k = jnp.asarray(k, _I32)
+    first = k <= 1
+    if terms is None:
+        terms = _q_counter_terms(fmt, k, msq1)
+    rk = terms[0]
+    mean_n = _q_mean_update(fmt, first, rk, k, mean, xq)
+
+    # VARIANCE: d2 = (x - mu_k)^2 via the widening multiplier
+    d = sat_sub(fmt, xq, mean_n)
+    d2 = sat_mul(fmt, d, d)
+    var_n, ecc, zeta, thr, outlier = _q_post_d2(
+        fmt, k, first, terms, d2, var)
+    return mean_n, var_n, ecc, zeta, thr, outlier
+
+
+def teda_q_step(fmt: QFormat, state: TedaState, xq: jnp.ndarray,
+                msq1, terms=None) -> Tuple[TedaState, TedaOutput]:
+    """One multivariate Q-TEDA iteration; xq int32 Q of shape (..., N).
+
+    Feature reduction ||x - mu||^2 is a saturating adder tree over the
+    per-feature squares (static N); everything after d2 is the shared
+    `_q_post_d2` pipeline.  `terms` lets the stream driver pass
+    precomputed `_q_counter_terms` for this instant.
+    """
+    k = state.k + 1
+    first = k <= 1
+
+    if terms is None:
+        terms = _q_counter_terms(fmt, k, msq1)
+    rk = terms[0]
+    mean = _q_mean_update(fmt, first[..., None], rk[..., None],
+                          k[..., None], state.mean, xq)
+
+    d = sat_sub(fmt, xq, mean)
+    n_features = xq.shape[-1]
+    d2 = sat_mul(fmt, d[..., 0], d[..., 0])
+    for j in range(1, n_features):
+        d2 = sat_add(fmt, d2, sat_mul(fmt, d[..., j], d[..., j]))
+    var, ecc, zeta, thr, outlier = _q_post_d2(
+        fmt, k, first, terms, d2, state.var)
+
+    one = sat(fmt, jnp.asarray(min(fmt.one, fmt.qmax), _I32))
+    out = TedaOutput(ecc=ecc, typ=sat_sub(fmt, one, ecc), zeta=zeta,
+                     threshold=thr, outlier=outlier, k=k)
+    return TedaState(k=k, mean=mean, var=var), out
+
+
+def teda_q_stream(x: jnp.ndarray, fmt: QFormat, m: float = 3.0,
+                  state: Optional[TedaState] = None,
+                  ) -> Tuple[TedaState, TedaOutput]:
+    """Bit-accurate Q-TEDA over a stream x (T, ..., N) via lax.scan.
+
+    Float input is quantized through the format's ADC front-end;
+    pre-quantized int32 input is passed through untouched.  Outputs are
+    Q int32 (dequantize for plots); `outlier` is bool.
+    """
+    fmt.validate()
+    if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating):
+        xq = fmt.quantize(x)
+    else:
+        xq = jnp.asarray(x, _I32)
+    if state is None:
+        state = teda_q_init(xq.shape[1:-1], xq.shape[-1])
+    msq1 = msq1_const(fmt, m)
+
+    # hoist the counter-only dividers out of the sequential scan,
+    # vectorized over all T instants (bit-identical values)
+    t_len = xq.shape[0]
+    ks = (jnp.arange(1, t_len + 1, dtype=_I32)
+          .reshape((t_len,) + (1,) * state.k.ndim) + state.k[None])
+    terms = _q_counter_terms(fmt, ks, msq1)
+
+    def body(s, inp):
+        xk, rk, inv_k, thr = inp
+        return teda_q_step(fmt, s, xk, msq1, terms=(rk, inv_k, thr))
+
+    return jax.lax.scan(body, state, (xq,) + terms)
+
+
+def teda_q_scan_chan(x: jnp.ndarray, fmt: QFormat, m: float = 3.0,
+                     k0: int = 0, mean0: Optional[jnp.ndarray] = None,
+                     var0: Optional[jnp.ndarray] = None):
+    """Q-TEDA over (T, C) — C independent univariate channels.
+
+    Pure-JAX `lax.scan` over `_q_step_u`, the exact function the integer
+    Pallas kernel executes per row: the kernel output must match this
+    bit-for-bit.  Returns (final (k, mean, var), dict of (T, C) arrays).
+    """
+    fmt.validate()
+    if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating):
+        xq = fmt.quantize(x)
+    else:
+        xq = jnp.asarray(x, _I32)
+    t_len, c = xq.shape
+    mean0 = jnp.zeros((c,), _I32) if mean0 is None else mean0.astype(_I32)
+    var0 = jnp.zeros((c,), _I32) if var0 is None else var0.astype(_I32)
+    msq1 = msq1_const(fmt, m)
+
+    def body(carry, inp):
+        mean, var = carry
+        kk, xr, rk, inv_k, thr_k = inp
+        mean_n, var_n, ecc, zeta, thr, outl = _q_step_u(
+            fmt, kk, mean, var, xr, msq1, terms=(rk, inv_k, thr_k))
+        return (mean_n, var_n), (mean_n, var_n, ecc, zeta,
+                                 jnp.broadcast_to(thr, xr.shape),
+                                 jnp.broadcast_to(outl, xr.shape))
+
+    ks = k0 + jnp.arange(1, t_len + 1, dtype=_I32)
+    terms = _q_counter_terms(fmt, ks, msq1)
+    (mean_f, var_f), (mean, var, ecc, zeta, thr, outl) = jax.lax.scan(
+        body, (mean0, var0), (ks, xq) + terms)
+    final = (jnp.full((c,), k0 + t_len, _I32), mean_f, var_f)
+    outs = {"mean": mean, "var": var, "ecc": ecc, "zeta": zeta,
+            "threshold": thr, "outlier": outl}
+    return final, outs

@@ -13,9 +13,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.teda import TedaState
+from repro.fixedpoint.qformat import QFormat, div_qi
+from repro.fixedpoint.teda_q import msq1_const
 from repro.kernels.teda_scan import teda_pallas_call
+from repro.kernels.teda_q_scan import teda_q_pallas_call
 
-__all__ = ["teda_scan_tpu", "default_interpret"]
+__all__ = ["teda_scan_tpu", "teda_q_scan_tpu", "default_interpret"]
 
 
 def default_interpret() -> bool:
@@ -27,19 +30,31 @@ def _round_up(v: int, mult: int) -> int:
     return -(-v // mult) * mult
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("block_t", "interpret", "lane_pad"))
-def _padded_call(x, scal, init_sum, init_var, *, block_t, interpret,
-                 lane_pad):
+def _pad_layout(x, init_a, init_b, block_t, lane_pad):
+    """Shared kernel-layout padding: time to block_t, lanes to lane_pad.
+
+    Returns the padded (x, init_a, init_b), the un-pad slice for
+    (T, C)-shaped outputs, and the padded time length.  All three
+    public wrappers route through this so the layout contract has one
+    definition.
+    """
     t_len, c = x.shape
     tp = _round_up(max(t_len, block_t), block_t)
     cp = _round_up(c, lane_pad)
     xp = jnp.pad(x, ((0, tp - t_len), (0, cp - c)))
-    sp = jnp.pad(init_sum, ((0, 0), (0, cp - c)))
-    vp = jnp.pad(init_var, ((0, 0), (0, cp - c)))
+    ap = jnp.pad(init_a, ((0, 0), (0, cp - c)))
+    bp = jnp.pad(init_b, ((0, 0), (0, cp - c)))
+    return xp, ap, bp, (slice(0, t_len), slice(0, c)), tp
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_t", "interpret", "lane_pad"))
+def _padded_call(x, scal, init_sum, init_var, *, block_t, interpret,
+                 lane_pad):
+    xp, sp, vp, sl, _ = _pad_layout(x, init_sum, init_var, block_t,
+                                    lane_pad)
     mean, var, ecc, outlier = teda_pallas_call(
         xp, scal, sp, vp, block_t=block_t, interpret=interpret)
-    sl = (slice(0, t_len), slice(0, c))
     return mean[sl], var[sl], ecc[sl], outlier[sl]
 
 
@@ -48,15 +63,11 @@ def _padded_call(x, scal, init_sum, init_var, *, block_t, interpret,
 def _padded_verdict_call(x, scal, init_sum, init_var, *, block_t,
                          interpret, lane_pad):
     t_len, c = x.shape
-    tp = _round_up(max(t_len, block_t), block_t)
-    cp = _round_up(c, lane_pad)
-    xp = jnp.pad(x, ((0, tp - t_len), (0, cp - c)))
-    sp = jnp.pad(init_sum, ((0, 0), (0, cp - c)))
-    vp = jnp.pad(init_var, ((0, 0), (0, cp - c)))
+    xp, sp, vp, sl, tp = _pad_layout(x, init_sum, init_var, block_t,
+                                     lane_pad)
     ecc, outlier, fsum, fvar = teda_pallas_call(
         xp, scal, sp, vp, block_t=block_t, interpret=interpret,
         verdict_only=True)
-    sl = (slice(0, t_len), slice(0, c))
     # final state must come from the last VALID row, not the padded tail:
     # recompute it from the t_len-1 row semantics (padding adds zeros to
     # the sum; subtracting nothing needed because mean = sum/k uses k of
@@ -134,6 +145,73 @@ def teda_scan_tpu(x: jnp.ndarray, m: float | jnp.ndarray = 3.0,
     thr = (jnp.asarray(m, jnp.float32) ** 2 + 1.0) / (2.0 * k_all)[:, None]
     final = TedaState(
         k=jnp.full((c,), k0 + t_len),
+        mean=mean[-1][:, None],
+        var=var[-1],
+    )
+    outs = {"mean": mean, "var": var, "ecc": ecc, "zeta": zeta,
+            "threshold": jnp.broadcast_to(thr, ecc.shape),
+            "outlier": outlier.astype(bool)}
+    return final, outs
+
+
+# ------------------------------------------------------- Q-format kernel
+@functools.partial(jax.jit,
+                   static_argnames=("fmt", "block_t", "interpret",
+                                    "lane_pad"))
+def _padded_q_call(xq, scal, init_mean, init_var, *, fmt, block_t,
+                   interpret, lane_pad):
+    # zero-padded channels stay at mean=var=0 (var>0 guard absorbs them)
+    xp, mp, vp, sl, _ = _pad_layout(xq, init_mean, init_var, block_t,
+                                    lane_pad)
+    mean, var, ecc, outlier = teda_q_pallas_call(
+        xp, scal, mp, vp, fmt=fmt, block_t=block_t, interpret=interpret)
+    return mean[sl], var[sl], ecc[sl], outlier[sl]
+
+
+def teda_q_scan_tpu(x: jnp.ndarray, fmt: QFormat,
+                    m: float | jnp.ndarray = 3.0,
+                    state: Optional[TedaState] = None, *,
+                    block_t: int = 256, interpret: Optional[bool] = None,
+                    lane_pad: int = 128) -> Tuple[TedaState, dict]:
+    """Bit-accurate Q-format TEDA kernel over x (T, C) channel streams.
+
+    Float input is quantized through `fmt`; int32 input is taken as
+    already-quantized Q values.  Bit-exact with the pure-JAX
+    `fixedpoint.teda_q_scan_chan` (same per-row step function).  The
+    final state is read from the last *valid* output row, so time
+    padding never leaks into carried state.  Returns (TedaState with Q
+    int32 mean (C, 1) / var (C,), outputs dict of (T, C) arrays: mean,
+    var, ecc, zeta, threshold — all Q int32 — and bool outlier).
+    """
+    fmt.validate()
+    if interpret is None:
+        interpret = default_interpret()
+    if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating):
+        xq = fmt.quantize(x)
+    else:
+        xq = jnp.asarray(x, jnp.int32)
+    t_len, c = xq.shape
+    if state is None:
+        k0 = jnp.int32(0)
+        init_mean = jnp.zeros((1, c), jnp.int32)
+        init_var = jnp.zeros((1, c), jnp.int32)
+    else:
+        k0 = jnp.asarray(state.k).reshape(-1)[0].astype(jnp.int32)
+        init_mean = state.mean[..., 0].reshape(1, c).astype(jnp.int32)
+        init_var = state.var.reshape(1, c).astype(jnp.int32)
+    msq1 = jnp.asarray(msq1_const(fmt, m), jnp.int32)
+    scal = jnp.stack([msq1, k0])
+
+    mean, var, ecc, outlier = _padded_q_call(
+        xq, scal, init_mean, init_var, fmt=fmt, block_t=block_t,
+        interpret=interpret, lane_pad=lane_pad)
+
+    k_all = k0 + jnp.arange(1, t_len + 1, dtype=jnp.int32)
+    zeta = ecc >> 1
+    thr = div_qi(fmt, jnp.broadcast_to(msq1, k_all.shape),
+                 2 * k_all)[:, None]
+    final = TedaState(
+        k=jnp.full((c,), k0 + t_len, jnp.int32),
         mean=mean[-1][:, None],
         var=var[-1],
     )

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: chunked *integer* Q-format TEDA scan.
+
+The quantized datapath is not associative — truncation/saturation error
+depends on operation order — so the float kernel's prefix-sum tricks
+would change the bits.  Instead this kernel is the direct TPU analog of
+the FPGA pipeline: a sequential row loop inside each time-chunk (one
+sample retired per "cycle", exactly like the paper's critical path),
+vectorized across the 128-lane channel axis.  The grid still walks
+time-chunks, so Mosaic overlaps the HBM->VMEM DMA of chunk i+1 with
+compute on chunk i — the inter-module pipeline registers' role.
+
+Each row executes `repro.fixedpoint.teda_q._q_step_u`, the same
+function `teda_q_scan_chan` scans over, which makes this kernel
+bit-exact with the pure-JAX Q scan by construction.
+
+Layout contract (enforced by ops.py):
+  x: (T, C) int32 Q-values, T % block_t == 0, C % 128 == 0,
+  block_t % 8 == 0.  SMEM scalars: [msq1_q, k0] int32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.fixedpoint.qformat import QFormat
+from repro.fixedpoint.teda_q import _q_counter_terms, _q_step_u
+from repro.kernels.teda_scan import tpu_compiler_params
+
+__all__ = ["teda_q_scan_kernel", "teda_q_pallas_call"]
+
+
+def teda_q_scan_kernel(scal_ref, x_ref, init_mean_ref, init_var_ref,
+                       mean_ref, var_ref, ecc_ref, outlier_ref,
+                       mean_carry, var_carry, *, block_t: int,
+                       fmt: QFormat):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        mean_carry[...] = init_mean_ref[...]
+        var_carry[...] = init_var_ref[...]
+
+    msq1 = scal_ref[0]
+    k0 = scal_ref[1]
+
+    # counter-only dividers for the whole chunk, vectorized over rows
+    # (one bit-serial pass instead of one per row; bit-identical values)
+    kv = (k0 + i * block_t + 1
+          + jax.lax.broadcasted_iota(jnp.int32, (block_t, 1), 0))
+    rk_b, inv_b, thr_b = _q_counter_terms(fmt, kv, msq1)
+
+    def row(r, carry):
+        mean, var = carry  # (1, C) int32 Q
+        k = k0 + i * block_t + r + 1  # the FPGA's counter register
+        xr = x_ref[pl.ds(r, 1), :]
+        terms = tuple(jax.lax.dynamic_slice_in_dim(t, r, 1, 0)
+                      for t in (rk_b, inv_b, thr_b))
+        mean_n, var_n, ecc, _zeta, _thr, outl = _q_step_u(
+            fmt, k, mean, var, xr, msq1, terms=terms)
+        mean_ref[pl.ds(r, 1), :] = mean_n
+        var_ref[pl.ds(r, 1), :] = var_n
+        ecc_ref[pl.ds(r, 1), :] = ecc
+        outlier_ref[pl.ds(r, 1), :] = outl.astype(jnp.int8)
+        return mean_n, var_n
+
+    mean, var = jax.lax.fori_loop(
+        0, block_t, row, (mean_carry[...], var_carry[...]))
+    mean_carry[...] = mean
+    var_carry[...] = var
+
+
+def teda_q_pallas_call(x: jnp.ndarray, scal: jnp.ndarray,
+                       init_mean: jnp.ndarray, init_var: jnp.ndarray,
+                       *, fmt: QFormat, block_t: int, interpret: bool):
+    """Raw pallas_call. x (T, C) int32 pre-padded; scal = [msq1, k0]."""
+    t_len, c = x.shape
+    assert t_len % block_t == 0 and block_t % 8 == 0 and c % 128 == 0, (
+        "ops.py must pad: T % block_t == 0, block_t % 8 == 0, C % 128 == 0")
+    grid = (t_len // block_t,)
+
+    row_spec = pl.BlockSpec((block_t, c), lambda i: (i, 0))
+    carry_spec = pl.BlockSpec((1, c), lambda i: (0, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((t_len, c), jnp.int32),  # mean (Q)
+        jax.ShapeDtypeStruct((t_len, c), jnp.int32),  # var (Q)
+        jax.ShapeDtypeStruct((t_len, c), jnp.int32),  # ecc (Q)
+        jax.ShapeDtypeStruct((t_len, c), jnp.int8),   # outlier flag
+    ]
+    kernel = functools.partial(teda_q_scan_kernel, block_t=block_t,
+                               fmt=fmt)
+    compiler_params = None
+    if not interpret:
+        compiler_params = tpu_compiler_params(
+            dimension_semantics=("arbitrary",))  # sequential carry
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # scal (2,) int32
+            row_spec,    # x
+            carry_spec,  # init_mean
+            carry_spec,  # init_var
+        ],
+        out_specs=[row_spec, row_spec, row_spec, row_spec],
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((1, c), jnp.int32),  # running mean carry
+            pltpu.VMEM((1, c), jnp.int32),  # running var carry
+        ],
+        compiler_params=compiler_params,
+        interpret=interpret,
+    )(scal, x, init_mean, init_var)

@@ -22,7 +22,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["teda_scan_kernel", "teda_pallas_call"]
+__all__ = ["teda_scan_kernel", "teda_pallas_call", "tpu_compiler_params"]
+
+
+def tpu_compiler_params(**kw):
+    """Version-compatible Pallas TPU CompilerParams.
+
+    The class is TPUCompilerParams on jax 0.4.x and CompilerParams on
+    newer releases; without this shim the compiled (non-interpret) TPU
+    path raises AttributeError on one side of the rename.
+    """
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kw)
 
 
 def _shift_down(v: jnp.ndarray, d: int, fill: float) -> jnp.ndarray:
@@ -153,7 +166,7 @@ def teda_pallas_call(x: jnp.ndarray, scal: jnp.ndarray,
                                verdict_only=verdict_only)
     compiler_params = None
     if not interpret:
-        compiler_params = pltpu.CompilerParams(
+        compiler_params = tpu_compiler_params(
             dimension_semantics=("arbitrary",))  # sequential carry
     return pl.pallas_call(
         kernel,

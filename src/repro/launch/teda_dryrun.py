@@ -21,8 +21,11 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.distributed import _local_shard_scan
-from repro.launch.hlo_analysis import collective_stats, roofline_terms
+from repro.launch.hlo_analysis import (collective_stats,
+                                       cost_analysis_compat,
+                                       roofline_terms)
 from repro.launch.mesh import make_production_mesh
+from repro.sharding.rules import shard_map_compat
 
 
 def run(multi_pod: bool, t_total: int, n_feat: int) -> dict:
@@ -33,12 +36,12 @@ def run(multi_pod: bool, t_total: int, n_feat: int) -> dict:
     import functools
     body = functools.partial(_local_shard_scan, m=3.0, axis_name=axes)
     from repro.core.teda import TedaOutput, TedaState
-    mapped = jax.shard_map(
+    mapped = shard_map_compat(
         body, mesh=mesh,
         in_specs=(P(axes, None),),
         out_specs=(TedaState(k=P(), mean=P(), var=P()),
                    TedaOutput(*([P(axes)] * 6))),
-        check_vma=False,
+        check=False,
     )
     x = jax.ShapeDtypeStruct((t_total, n_feat), jnp.float32)
     with mesh:
@@ -46,7 +49,7 @@ def run(multi_pod: bool, t_total: int, n_feat: int) -> dict:
             mapped,
             in_shardings=(NamedSharding(mesh, P(axes, None)),),
         ).lower(x).compile()
-    cost = comp.cost_analysis() or {}
+    cost = cost_analysis_compat(comp)
     coll = collective_stats(comp.as_text())
     mem = comp.memory_analysis()
     terms = roofline_terms(float(cost.get("flops", 0.0)),

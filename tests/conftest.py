@@ -1,0 +1,23 @@
+"""Shared test helpers."""
+import pytest
+
+
+def given_or_cases(argnames, cases, strategies, max_examples=100):
+    """Property test when hypothesis is installed, fixed cases otherwise.
+
+    `strategies` is a callable receiving `hypothesis.strategies` and
+    returning the kwargs for `@given`; `cases` are
+    `@pytest.mark.parametrize(argnames, ...)` tuples in the same order,
+    used on minimal installs so the module still collects and runs.
+    """
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+    except ImportError:
+        return pytest.mark.parametrize(argnames, cases)
+
+    def deco(fn):
+        return settings(max_examples=max_examples,
+                        deadline=None)(given(**strategies(st))(fn))
+
+    return deco

@@ -1,0 +1,211 @@
+"""Fixed-point subsystem: Q-op exactness vs big-int oracle + Q-TEDA
+fidelity vs the float64 software oracle."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.teda import teda_numpy_loop
+from repro.fixedpoint import (QFormat, div_qi, div_qq, sat_add, sat_mul,
+                              sat_sub, teda_q_stream, teda_q_scan_chan,
+                              evaluate_format, wordlength_sweep)
+
+FMT32 = QFormat(32, 20)
+
+
+# ------------------------------------------------- exact big-int oracle
+def _mul_ref(a, b, fmt):
+    p = int(a) * int(b)
+    neg, mag = p < 0, abs(p)
+    if fmt.rounding == "round" and fmt.frac_len:
+        mag += 1 << (fmt.frac_len - 1)
+    return (-1 if neg else 1) * min(mag >> fmt.frac_len, fmt.qmax)
+
+
+def _div_ref(n, d, fmt, shift):
+    n, d = int(n), int(d)
+    if d == 0:
+        return fmt.qmax if n >= 0 else -fmt.qmax
+    neg = (n < 0) != (d < 0)
+    q, r = divmod(abs(n) << shift, abs(d))
+    if fmt.rounding == "round" and 2 * r >= abs(d):
+        q += 1
+    return (-1 if neg else 1) * min(q, fmt.qmax)
+
+
+@pytest.mark.parametrize("fmt", [
+    QFormat(16, 8), QFormat(16, 8, "round"), QFormat(24, 12),
+    QFormat(32, 20), QFormat(32, 20, "round"), QFormat(32, 30),
+    QFormat(8, 4),
+])
+def test_q_ops_exact(fmt):
+    """Every Q op must be bit-identical to arbitrary-precision math."""
+    rng = np.random.default_rng(fmt.word_len * 100 + fmt.frac_len)
+    a = rng.integers(fmt.qmin, fmt.qmax + 1, size=300).astype(np.int32)
+    b = rng.integers(fmt.qmin, fmt.qmax + 1, size=300).astype(np.int32)
+    k = rng.integers(1, 100000, size=300).astype(np.int32)
+    aj, bj, kj = jnp.asarray(a), jnp.asarray(b), jnp.asarray(k)
+
+    got = np.asarray(sat_mul(fmt, aj, bj))
+    exp = np.array([_mul_ref(x, y, fmt) for x, y in zip(a, b)])
+    np.testing.assert_array_equal(got, exp)
+
+    got = np.asarray(div_qq(fmt, aj, bj))
+    exp = np.array([_div_ref(x, y, fmt, fmt.frac_len)
+                    for x, y in zip(a, b)])
+    np.testing.assert_array_equal(got, exp)
+
+    got = np.asarray(div_qi(fmt, aj, kj))
+    exp = np.array([_div_ref(x, y, fmt, 0) for x, y in zip(a, k)])
+    np.testing.assert_array_equal(got, exp)
+
+    got = np.asarray(sat_add(fmt, aj, bj))
+    exp = np.clip(a.astype(np.int64) + b.astype(np.int64),
+                  fmt.qmin, fmt.qmax)
+    np.testing.assert_array_equal(got, exp)
+
+    got = np.asarray(sat_sub(fmt, aj, bj))
+    exp = np.clip(a.astype(np.int64) - b.astype(np.int64),
+                  fmt.qmin, fmt.qmax)
+    np.testing.assert_array_equal(got, exp)
+
+
+def test_divider_saturates_on_zero_divisor():
+    fmt = QFormat(16, 8)
+    z = np.asarray(div_qq(fmt, jnp.asarray([5, -5]), jnp.asarray([0, 0])))
+    np.testing.assert_array_equal(z, [fmt.qmax, -fmt.qmax])
+
+
+def test_quantize_roundtrip_within_one_lsb():
+    fmt = QFormat(24, 16)
+    x = np.linspace(-50.0, 50.0, 999).astype(np.float32)
+    q = fmt.quantize(jnp.asarray(x))
+    back = np.asarray(fmt.dequantize(q))
+    assert np.abs(back - x).max() <= fmt.resolution
+
+
+def test_quantize_saturates():
+    fmt = QFormat(16, 12)  # range ~ +-8
+    q = np.asarray(fmt.quantize(jnp.asarray([1e6, -1e6, np.nan])))
+    np.testing.assert_array_equal(q, [fmt.qmax, fmt.qmin, 0])
+
+
+def test_quantize_wl32_never_emits_int_min():
+    """float32 can't represent qmin at WL=32: the clamp must happen in
+    the integer domain, or -2^31 (outside the symmetric format) leaks
+    into the datapath and breaks the |v| < 2^31 magnitude contract."""
+    fmt = QFormat(32, 20)
+    q = np.asarray(fmt.quantize(jnp.asarray([-3000.0, -1e30, 1e30])))
+    np.testing.assert_array_equal(q, [fmt.qmin, fmt.qmin, fmt.qmax])
+    # and the divider treats the saturated value correctly
+    r = int(div_qq(fmt, jnp.asarray(fmt.qmin), jnp.asarray(fmt.one)))
+    assert r == fmt.qmin  # -qmax / 1.0 == -qmax, not 0
+
+
+def test_format_validation():
+    with pytest.raises(ValueError):
+        QFormat(33, 8).validate()
+    with pytest.raises(ValueError):
+        QFormat(16, 31).validate()
+    with pytest.raises(ValueError):
+        QFormat(16, 16).validate()  # frac_len must leave the sign bit
+    with pytest.raises(ValueError):
+        QFormat(16, 8, "stochastic").validate()
+    QFormat(16, 15).validate()  # Q0.15-style fractional-only is legal
+
+
+# --------------------------------------------------- Q-TEDA vs oracle
+def _stream(t, n, seed=0, spike=None):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(t, n)).astype(np.float32)
+    if spike is not None:
+        lo, hi, amp = spike
+        x[lo:hi] += amp
+    return x
+
+
+def test_q32_verdicts_match_float_oracle():
+    """Acceptance bar: >= 99% verdict agreement at WL=32."""
+    x = _stream(1200, 2, seed=1, spike=(800, 815, 7.0))
+    r = evaluate_format(x, FMT32, 3.0)
+    assert r["verdict_agreement"] >= 0.99
+    assert r["max_abs_err_ecc"] < 1e-3
+    assert r["n_outliers_ref"] > 0  # the spike is detected at all
+
+
+def test_q_first_sample_and_constant_stream():
+    """k=1 branch + var>0 guard: constant stream never flags."""
+    x = jnp.ones((50, 2), jnp.float32) * 3.25
+    _, out = teda_q_stream(x, FMT32, 3.0)
+    assert not bool(np.asarray(out.outlier).any())
+    # ecc == 1/k quantized: compare dequantized against 1/k
+    ecc = FMT32.dequantize_np(np.asarray(out.ecc))
+    np.testing.assert_allclose(ecc, 1.0 / np.arange(1, 51),
+                               atol=2 * FMT32.resolution)
+
+
+def test_q_state_continuation_bit_exact():
+    """Integer datapath: carried-state restart is exactly bit-equal."""
+    x = _stream(256, 3, seed=4)
+    xj = jnp.asarray(x)
+    _, full = teda_q_stream(xj, FMT32)
+    st1, _ = teda_q_stream(xj[:100], FMT32)
+    _, second = teda_q_stream(xj[100:], FMT32, state=st1)
+    np.testing.assert_array_equal(np.asarray(second.ecc),
+                                  np.asarray(full.ecc)[100:])
+    np.testing.assert_array_equal(np.asarray(second.outlier),
+                                  np.asarray(full.outlier)[100:])
+
+
+def test_chan_scan_matches_multivariate_n1():
+    """(T, C) channel driver == multivariate driver with N=1, bitwise."""
+    x = _stream(200, 4, seed=5)
+    fin, outs = teda_q_scan_chan(jnp.asarray(x), FMT32, 3.0)
+    _, out_mv = teda_q_stream(jnp.asarray(x[:, :, None]), FMT32, 3.0)
+    np.testing.assert_array_equal(np.asarray(outs["ecc"]),
+                                  np.asarray(out_mv.ecc))
+    np.testing.assert_array_equal(np.asarray(outs["zeta"]),
+                                  np.asarray(out_mv.zeta))
+    np.testing.assert_array_equal(np.asarray(outs["outlier"]),
+                                  np.asarray(out_mv.outlier))
+
+
+def test_wordlength_sweep_monotone_resolution():
+    """Wider FL at fixed WL=32 must not increase eccentricity error."""
+    x = _stream(600, 2, seed=7, spike=(400, 410, 6.0))
+    rows = wordlength_sweep(x, [QFormat(32, 12), QFormat(32, 20)], 3.0)
+    assert rows[1]["max_abs_err_ecc"] <= rows[0]["max_abs_err_ecc"]
+    for r in rows:
+        assert 0.0 <= r["verdict_agreement"] <= 1.0
+
+
+def test_skinny_16bit_datapath_runs():
+    """WL=16 still detects a huge spike even with coarse resolution."""
+    x = _stream(600, 1, seed=8)
+    x[500] += 40.0
+    _, out = teda_q_stream(jnp.asarray(x), QFormat(16, 10), 3.0)
+    assert bool(np.asarray(out.outlier)[500])
+
+
+def test_q_output_dtypes_and_typicality():
+    x = _stream(64, 2, seed=9)
+    _, out = teda_q_stream(jnp.asarray(x), FMT32, 3.0)
+    assert out.ecc.dtype == jnp.int32
+    assert out.outlier.dtype == jnp.bool_
+    # eq (4): typ = 1 - ecc in Q arithmetic (saturating)
+    one = min(FMT32.one, FMT32.qmax)
+    np.testing.assert_array_equal(
+        np.asarray(out.typ),
+        np.clip(one - np.asarray(out.ecc, np.int64),
+                FMT32.qmin, FMT32.qmax))
+
+
+def test_oracle_agreement_on_damadics_window():
+    """Acceptance: >= 99% agreement on the DAMADICS stream at WL=32."""
+    from repro.data.damadics import make_benchmark
+    x, w = make_benchmark(6, t_len=40000)
+    seg = x[w.start - 1000:w.stop + 200]
+    ref = teda_numpy_loop(seg.astype(np.float64), 3.0)
+    _, out = teda_q_stream(jnp.asarray(seg), FMT32, 3.0)
+    agree = (np.asarray(out.outlier) == ref["outlier"]).mean()
+    assert agree >= 0.99
+    assert ref["outlier"].sum() > 0

@@ -2,7 +2,8 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import given_or_cases
 
 from repro.core.teda import TedaState
 from repro.kernels.ops import teda_scan_tpu
@@ -86,16 +87,22 @@ def test_padding_rows_do_not_leak():
 
 
 # ------------------------------------------------------------- properties
-@settings(max_examples=20, deadline=None)
-@given(t=st.integers(2, 300), c=st.integers(1, 9),
-       seed=st.integers(0, 2 ** 16), m=st.floats(1.0, 5.0),
-       block_t=st.sampled_from([8, 32, 128]))
+@given_or_cases(
+    "t,c,seed,m,block_t",
+    [(2, 1, 0, 1.0, 8), (77, 3, 123, 3.0, 32), (300, 9, 7, 5.0, 128),
+     (129, 2, 999, 2.5, 8)],
+    lambda st: dict(t=st.integers(2, 300), c=st.integers(1, 9),
+                    seed=st.integers(0, 2 ** 16), m=st.floats(1.0, 5.0),
+                    block_t=st.sampled_from([8, 32, 128])),
+    max_examples=20)
 def test_property_kernel_matches_ref(t, c, seed, m, block_t):
     _check(_x(t, c, seed=seed), m=m, block_t=block_t)
 
 
-@settings(max_examples=10, deadline=None)
-@given(seed=st.integers(0, 2 ** 16))
+@given_or_cases(
+    "seed", [0, 123, 2 ** 16],
+    lambda st: dict(seed=st.integers(0, 2 ** 16)),
+    max_examples=10)
 def test_property_outliers_subset_of_high_zeta(seed):
     """Verdict consistency: outlier ⇒ zeta > threshold (eq 6)."""
     x = _x(200, 3, seed=seed)
@@ -121,6 +128,52 @@ def test_verdict_only_kernel_matches_full():
                                np.asarray(fin_full.var), rtol=1e-5)
     np.testing.assert_allclose(np.asarray(fin_v.mean),
                                np.asarray(fin_full.mean), rtol=1e-5)
+
+
+def test_verdict_only_matches_numpy_oracle():
+    """Slim path vs teda_ref: ecc/verdicts/final state, int8 flag dtype.
+
+    Covers the verdict_only=True kernel branch against the independent
+    float64 oracle, not just the full-output kernel path.
+    """
+    from repro.kernels.ops import teda_scan_verdict
+    from repro.kernels.teda_scan import teda_pallas_call
+
+    x = _x(256, 3, seed=23)
+    x[200:203, 1] += 18.0
+    ref = teda_ref(np.asarray(x, np.float32), 3.0)
+    fin, slim = teda_scan_verdict(jnp.asarray(x), 3.0, block_t=64)
+    np.testing.assert_allclose(np.asarray(slim["ecc"]), ref["ecc"],
+                               rtol=5e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(slim["outlier"]),
+                                  ref["outlier"])
+    # final carried state must equal the oracle's final-row statistics
+    assert fin is not None  # 256 % 64 == 0
+    np.testing.assert_allclose(np.asarray(fin.mean[:, 0]),
+                               ref["mean"][-1], rtol=5e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fin.var), ref["var"][-1],
+                               rtol=5e-4, atol=1e-5)
+    # the raw kernel emits an int8 flag (the 5B/sample HBM-write claim)
+    xp = jnp.asarray(np.pad(x, ((0, 0), (0, 125))))
+    scal = jnp.asarray([3.0, 0.0], jnp.float32)
+    zero = jnp.zeros((1, 128), jnp.float32)
+    _, flag8, _, _ = teda_pallas_call(xp, scal, zero, zero, block_t=64,
+                                      interpret=True, verdict_only=True)
+    assert flag8.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(flag8[:, :3]).astype(bool),
+                                  ref["outlier"])
+
+
+def test_verdict_only_no_final_state_when_padded():
+    """T % block_t != 0: the slim path must not hand back a final state
+    contaminated by padded rows."""
+    from repro.kernels.ops import teda_scan_verdict
+    x = _x(70, 2, seed=24)
+    fin, slim = teda_scan_verdict(jnp.asarray(x), 3.0, block_t=64)
+    assert fin is None
+    ref = teda_ref(np.asarray(x, np.float32), 3.0)
+    np.testing.assert_array_equal(np.asarray(slim["outlier"]),
+                                  ref["outlier"])
 
 
 def test_verdict_only_state_carry():

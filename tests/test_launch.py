@@ -62,9 +62,9 @@ def test_mini_dryrun_all_kinds():
         from repro.configs.registry import ShapeSpec, get_config
         from repro.launch.specs import build_cell
         from repro.launch.hlo_analysis import collective_stats, \
-            roofline_terms
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            cost_analysis_compat, roofline_terms
+        from repro.sharding.rules import make_mesh_compat
+        mesh = make_mesh_compat((4, 2), ("data", "model"))
         for arch in ("mixtral_8x7b", "zamba2_2p7b", "gemma2_2b"):
             cfg = get_config(arch).reduced()
             for kind, b, s in (("train", 8, 64), ("prefill", 8, 64),
@@ -77,7 +77,7 @@ def test_mini_dryrun_all_kinds():
                         out_shardings=cell.out_shardings,
                         donate_argnums=cell.donate_argnums,
                     ).lower(*cell.args).compile()
-                cost = comp.cost_analysis()
+                cost = cost_analysis_compat(comp)
                 assert float(cost.get("flops", 0)) > 0
                 stats = collective_stats(comp.as_text())
                 terms = roofline_terms(1e12, 1e9, stats["total_bytes"])
@@ -97,8 +97,8 @@ def test_pipeline_parallel_4stage():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
         import jax, jax.numpy as jnp, numpy as np
         from repro.sharding.pipeline import make_pipelined
-        mesh = jax.make_mesh((4,), ("pipe",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.sharding.rules import make_mesh_compat
+        mesh = make_mesh_compat((4,), ("pipe",))
         # 4 affine stages; reference = composed application
         ws = jnp.asarray([[2.0], [0.5], [3.0], [1.0]])  # (S, 1) scales
         def stage(w, x):

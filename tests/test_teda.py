@@ -3,7 +3,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import given_or_cases
 
 from repro.core import (teda_init, teda_step, teda_stream, teda_scan,
                         teda_threshold)
@@ -129,9 +130,13 @@ def test_jit_and_grad_safety():
 
 
 # ------------------------------------------------------------- properties
-@settings(max_examples=25, deadline=None)
-@given(t=st.integers(2, 200), n=st.integers(1, 6),
-       seed=st.integers(0, 2 ** 16), m=st.floats(0.5, 6.0))
+@given_or_cases(
+    "t,n,seed,m",
+    [(2, 1, 0, 0.5), (37, 3, 123, 3.0), (111, 2, 999, 1.5),
+     (200, 6, 7, 6.0), (64, 4, 2 ** 16, 2.0)],
+    lambda st: dict(t=st.integers(2, 200), n=st.integers(1, 6),
+                    seed=st.integers(0, 2 ** 16), m=st.floats(0.5, 6.0)),
+    max_examples=25)
 def test_property_equivalence_and_invariants(t, n, seed, m):
     x = _stream(t, n, seed=seed)
     ref = teda_numpy_loop(x, m)
@@ -152,8 +157,11 @@ def test_property_equivalence_and_invariants(t, n, seed, m):
     assert np.all(np.asarray(seq.ecc) > 0)
 
 
-@settings(max_examples=15, deadline=None)
-@given(seed=st.integers(0, 2 ** 16), amp=st.floats(20.0, 80.0))
+@given_or_cases(
+    "seed,amp", [(0, 20.0), (123, 45.0), (2 ** 16, 80.0)],
+    lambda st: dict(seed=st.integers(0, 2 ** 16),
+                    amp=st.floats(20.0, 80.0)),
+    max_examples=15)
 def test_property_large_spike_always_detected(seed, amp):
     """A >>m-sigma spike after burn-in must trip eq (6) with m=3."""
     x = _stream(300, 2, seed=seed)
