@@ -7,6 +7,10 @@ Prints ``name,us_per_call,derived`` CSV. Tables:
   Table 5             -> bench_platforms  (speedup vs software loop)
   Bit-accurate sim    -> bench_bitaccurate (Q-format word-length sweep)
 
+``bench_engine`` (StreamEngine samples/s vs chunk size x backend, the
+Table-5 serving analog) emits JSON rather than this CSV — run it
+standalone; CI runs ``bench_engine.py --smoke`` as its rot guard.
+
 The roofline/dry-run tables (EXPERIMENTS.md §Roofline) are produced by
 ``python -m repro.launch.dryrun`` + ``benchmarks/roofline.py`` (they need
 the 512-device environment and are cached under experiments/).

@@ -12,7 +12,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import teda_scan
-from repro.data.damadics import TABLE2, detection_report, make_benchmark
+from repro.data.damadics import detection_report, make_benchmark
 
 
 def ascii_plot(y, thr, flags, width=72, height=12, title=""):

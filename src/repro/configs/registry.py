@@ -6,7 +6,7 @@ published numbers (sources cited per-file) plus input-shape metadata.
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List, NamedTuple, Optional
+from typing import List, NamedTuple
 
 from repro.models.common import ModelConfig
 

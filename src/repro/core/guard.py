@@ -10,7 +10,10 @@ promises.
 
 Fully jittable: the guard state lives inside the train state and the skip
 is a `jnp.where` mask, so it composes with pjit/shard_map and costs a few
-hundred scalar flops per step.
+hundred scalar flops per step.  The monitored channels are packed
+`repro.engine` state (one slot per telemetry channel) advanced with the
+engine's single-sample fast path — the same per-stream contract the
+serving monitor and the chunked StreamEngine use.
 
 Also provides a host-side `StragglerDetector` (TEDA over per-step wall
 times across hosts) used by the launcher for straggler mitigation.
@@ -18,13 +21,26 @@ times across hosts) used by the launcher for straggler mitigation.
 from __future__ import annotations
 
 import time
-from typing import NamedTuple, Optional, Tuple
+from typing import TYPE_CHECKING, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.teda import TedaOutput, TedaState, teda_init, teda_step
+from repro.core.teda import TedaOutput
+
+if TYPE_CHECKING:  # type-only: repro.core.__init__ <-> engine.state cycle
+    from repro.engine.state import EngineState
+
+
+def _engine():
+    """Lazy import of the engine functional core.
+
+    `repro.core.__init__` imports this module while `repro.engine.state`
+    may itself be mid-import of `repro.core.teda` (either package can be
+    entered first); deferring to call time breaks the cycle.
+    """
+    from repro.engine import state
+    return state
 
 __all__ = ["GuardConfig", "GuardState", "GuardVerdict", "guard_init",
            "guard_step", "apply_guard", "StragglerDetector"]
@@ -38,7 +54,7 @@ class GuardConfig(NamedTuple):
 
 
 class GuardState(NamedTuple):
-    teda: TedaState          # one univariate TEDA state per channel
+    teda: "EngineState"      # packed per-channel engine state
     skipped: jnp.ndarray     # () int32 — total skipped steps
     last_outlier: jnp.ndarray  # (channels,) bool
 
@@ -50,7 +66,7 @@ class GuardVerdict(NamedTuple):
 
 def guard_init(cfg: GuardConfig) -> GuardState:
     return GuardState(
-        teda=teda_init((cfg.channels,), 1),
+        teda=_engine().engine_init(cfg.channels),
         skipped=jnp.zeros((), jnp.int32),
         last_outlier=jnp.zeros((cfg.channels,), bool),
     )
@@ -66,9 +82,10 @@ def guard_step(state: GuardState, metrics: jnp.ndarray, cfg: GuardConfig
     detectable — this extends the paper (which always absorbs samples) and
     is ablated in benchmarks/bench_detection.py.
     """
+    eng = _engine()
     finite = jnp.isfinite(metrics)
-    clean = jnp.where(finite, metrics, state.teda.mean[..., 0])
-    new_teda, out = teda_step(state.teda, clean[..., None], cfg.m)
+    clean = jnp.where(finite, metrics, state.teda.mean)
+    new_teda, out = eng.engine_step(state.teda, clean, cfg.m)
 
     in_warmup = state.teda.k[0] < cfg.warmup_steps
     outlier = jnp.logical_or(out.outlier, ~finite)
@@ -76,10 +93,11 @@ def guard_step(state: GuardState, metrics: jnp.ndarray, cfg: GuardConfig
 
     if cfg.exclude_outliers:
         keep = jnp.logical_or(~outlier, in_warmup)
-        new_teda = TedaState(
+        new_teda = eng.EngineState(
             k=jnp.where(keep, new_teda.k, state.teda.k),
-            mean=jnp.where(keep[..., None], new_teda.mean, state.teda.mean),
+            mean=jnp.where(keep, new_teda.mean, state.teda.mean),
             var=jnp.where(keep, new_teda.var, state.teda.var),
+            active=new_teda.active,
         )
 
     new_state = GuardState(

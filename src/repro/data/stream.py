@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Dict, Iterator, Optional
 
 import numpy as np
@@ -84,21 +85,62 @@ class PrefetchIterator:
                     if bool(verdict.skip):
                         self.dropped += 1
                         continue
-                self._q.put(item)
+                if not self._put(item):
+                    return
         finally:
-            self._q.put(None)
+            self._put(None)  # sentinel (skipped when closing)
+
+    def _put(self, item) -> bool:
+        """Bounded put that aborts when the iterator is closing.
+
+        A plain `Queue.put` on a full queue would block the daemon
+        thread forever once the consumer stops draining; polling the
+        stop event keeps `close()` able to finish the worker.
+        """
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
 
     def __iter__(self):
         return self
 
     def __next__(self):
-        item = self._q.get()
-        if item is None:
-            raise StopIteration
-        return item
+        # poll the stop event: a consumer already blocked here must wake
+        # when close() is called from another thread (after close, the
+        # producer drops items and the sentinel instead of enqueueing)
+        while True:
+            if self._stop.is_set():
+                raise StopIteration
+            try:
+                item = self._q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            if item is None:
+                raise StopIteration
+            return item
 
-    def close(self):
+    def close(self, timeout: float = 2.0):
+        """Stop the worker, unblock it if it sits on a full queue, join
+        it, and drain leftovers (incl. the sentinel) so no daemon thread
+        or queued batch outlives the iterator.
+
+        Bounded by `timeout`: a worker stuck inside the *source*
+        iterator (e.g. a blocking socket read) cannot observe the stop
+        event; after the deadline the daemon thread is abandoned rather
+        than hanging the caller.
+        """
         self._stop.set()
+        deadline = time.monotonic() + timeout
+        while self._thread.is_alive() and time.monotonic() < deadline:
+            try:  # make room so a blocked producer can observe the stop
+                self._q.get_nowait()
+            except queue.Empty:
+                pass
+            self._thread.join(timeout=0.05)
         try:
             while True:
                 self._q.get_nowait()

@@ -1,0 +1,119 @@
+"""Stateful multi-stream TEDA engine with ragged multi-tenant slots.
+
+`StreamEngine` owns packed per-stream state (`engine/state.py`) and
+processes arbitrary-length (T, C) chunks as they arrive, carrying exact
+state across calls for every backend in the registry
+(`engine/backends.py`).  Multi-tenancy is ragged by construction: every
+slot has its own `k`, an `active` mask gates state advancement, and
+`attach` / `detach` / `reset` recycle a slot for a new tenant mid-flight
+without touching neighbours.
+
+With a `mesh`, chunk processing fans out over the channel axis via
+`shard_map` (`sharding.rules.make_channel_fanout`) — channels are
+independent, so multi-device scale needs no collectives.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.teda import TedaState
+from repro.engine.backends import get_backend
+from repro.engine.state import (EngineState, engine_attach, engine_detach,
+                                engine_init, engine_process, engine_reset)
+
+__all__ = ["StreamEngine"]
+
+
+class StreamEngine:
+    """Stateful multi-stream TEDA detector over `capacity` slots.
+
+    >>> eng = StreamEngine(capacity=256, backend="pallas", m=3.0)
+    >>> verdicts = eng.process(chunk)          # chunk: (T, 256)
+    >>> eng.reset([7])                         # recycle slot 7 mid-flight
+    >>> eng.detach([3]); eng.attach([3])       # slot 3: new tenant
+
+    Chunks may have any length T >= 1; state is carried exactly across
+    calls (bit-for-bit on the Q path).  With `mesh=`, processing fans
+    out over the channel axis via shard_map for multi-device scale.
+    """
+
+    def __init__(self, capacity: int, backend: str = "scan", *,
+                 m: float = 3.0, fmt=None, block_t: int = 256,
+                 interpret: Optional[bool] = None, lane_pad: int = 128,
+                 mesh=None, axis_name: str = "data",
+                 auto_attach: bool = True):
+        self.capacity = int(capacity)
+        self.backend = get_backend(backend, m=m, fmt=fmt, block_t=block_t,
+                                   interpret=interpret, lane_pad=lane_pad)
+        self.state = engine_init(self.capacity, self.backend.state_dtype,
+                                 active=auto_attach)
+
+        def core(x, k, mean, var, active):
+            st, outs = engine_process(
+                EngineState(k=k, mean=mean, var=var, active=active), x,
+                self.backend)
+            return (st.k, st.mean, st.var), (outs["ecc"], outs["outlier"])
+
+        if mesh is not None:
+            from repro.sharding.rules import make_channel_fanout
+            n_shards = dict(mesh.shape)[axis_name]
+            if self.capacity % n_shards:
+                raise ValueError(
+                    f"capacity {self.capacity} not divisible by mesh "
+                    f"axis {axis_name!r} ({n_shards} shards)")
+            core = make_channel_fanout(core, mesh, axis_name)
+        self._fn = jax.jit(core)
+
+    # ------------------------------------------------------ slot admin
+    def attach(self, slots=None, n: Optional[int] = None):
+        """Activate slots for new streams; returns the slot indices.
+
+        With `slots=None`, grabs the first `n` free slots (all free
+        slots when `n` is also None).
+        """
+        if slots is None:
+            free = np.flatnonzero(~np.asarray(self.state.active))
+            slots = free if n is None else free[:n]
+            if n is not None and len(slots) < n:
+                raise ValueError(f"wanted {n} free slots, have {len(free)}")
+        idx = np.atleast_1d(np.asarray(slots))
+        self.state = engine_attach(self.state, idx)
+        return idx
+
+    def detach(self, slots):
+        self.state = engine_detach(self.state, slots)
+
+    def reset(self, slots=None):
+        self.state = engine_reset(self.state, slots)
+
+    # ------------------------------------------------------ processing
+    def process(self, x: jnp.ndarray) -> dict:
+        """Feed one (T, capacity) chunk; returns per-sample verdicts."""
+        x = jnp.asarray(x)
+        if x.ndim != 2 or x.shape[1] != self.capacity:
+            raise ValueError(
+                f"chunk must be (T, {self.capacity}), got {x.shape}")
+        st = self.state
+        (k, mean, var), (ecc, outlier) = self._fn(
+            x, st.k, st.mean, st.var, st.active)
+        self.state = EngineState(k=k, mean=mean, var=var, active=st.active)
+        return {"ecc": ecc, "outlier": outlier}
+
+    # ------------------------------------------------------- introspection
+    @property
+    def active_slots(self) -> np.ndarray:
+        return np.flatnonzero(np.asarray(self.state.active))
+
+    @property
+    def samples_seen(self) -> np.ndarray:
+        """Per-slot sample counts (the honest per-channel k)."""
+        return np.asarray(self.state.k)
+
+    def teda_state(self) -> TedaState:
+        """The packed state in the `repro.core` TedaState layout."""
+        return TedaState(k=self.state.k, mean=self.state.mean[:, None],
+                         var=self.state.var)

@@ -1,0 +1,158 @@
+"""Packed per-stream engine state + the pure functional core.
+
+The paper's FPGA pipeline is a *stateful online* detector — one sample
+in, one verdict out, O(1) state carried forever.  `EngineState` packs
+that state for C independent univariate TEDA modules (the paper's
+replicated-module scaling) as per-channel `k` / mean / var vectors plus
+an `active` occupancy mask, so every slot is ragged: its own stream
+position, recyclable for a new tenant mid-flight via
+`engine_attach` / `engine_detach` / `engine_reset`.
+
+Everything here is pure and jittable — `core/guard.py` and
+`launch/serve.py` run `engine_step` inside compiled train/decode steps.
+This module is a leaf (it depends only on `core/teda.py`): the backend
+registry and the stateful `StreamEngine` wrapper live one level up in
+`engine/backends.py` / `engine/engine.py`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.teda import TedaOutput, TedaState, teda_step
+
+__all__ = ["EngineState", "engine_init", "engine_process", "engine_step",
+           "engine_reset", "engine_attach", "engine_detach", "slot_mask"]
+
+
+class EngineState(NamedTuple):
+    """Packed per-stream state: C independent univariate TEDA modules.
+
+    k:      (C,) — samples absorbed per slot (honest per-channel count).
+    mean:   (C,) — recursive mean, eq (2).
+    var:    (C,) — recursive variance, eq (3).
+    active: (C,) bool — slot occupancy; inactive slots never advance.
+
+    dtype is float32, or int32 Q-values under the "pallas-q" backend.
+    """
+
+    k: jnp.ndarray
+    mean: jnp.ndarray
+    var: jnp.ndarray
+    active: jnp.ndarray
+
+
+def engine_init(capacity: int, dtype=jnp.float32,
+                active: bool = True) -> EngineState:
+    """Fresh packed state for `capacity` slots (Algorithm 1 init).
+
+    Each field gets its own buffer — aliased zeros would break buffer
+    donation when the state is carried through a jitted step.
+    """
+    return EngineState(k=jnp.zeros((capacity,), dtype),
+                       mean=jnp.zeros((capacity,), dtype),
+                       var=jnp.zeros((capacity,), dtype),
+                       active=jnp.full((capacity,), active))
+
+
+def slot_mask(slots, capacity: int) -> jnp.ndarray:
+    """Normalize a slot selector to a (C,) bool mask.
+
+    `slots` may be None (all slots), a bool mask, or integer indices.
+    Concrete indices are bounds-checked — JAX scatter silently drops
+    out-of-range indices, which would turn attach/reset on a bad slot
+    into a successful-looking no-op.  (Traced indices inside jit skip
+    the check.)
+    """
+    if slots is None:
+        return jnp.ones((capacity,), bool)
+    slots = jnp.asarray(slots)
+    if slots.dtype == bool:
+        return slots.reshape((capacity,))
+    try:
+        idx = np.asarray(slots)
+    except Exception:  # traced under jit: not concretizable
+        idx = None
+    if idx is not None and idx.size and (
+            idx.min() < 0 or idx.max() >= capacity):
+        raise IndexError(
+            f"slot indices {np.unique(idx).tolist()} out of range for "
+            f"capacity {capacity}")
+    return jnp.zeros((capacity,), bool).at[slots].set(True)
+
+
+def engine_reset(state: EngineState, slots=None) -> EngineState:
+    """Zero the TEDA state of the selected slots (k=mean=var=0), keeping
+    occupancy — the mid-flight recycle for a new tenant on a live slot."""
+    m = slot_mask(slots, state.k.shape[0])
+    zero = jnp.zeros((), state.k.dtype)
+    return EngineState(k=jnp.where(m, zero, state.k),
+                       mean=jnp.where(m, zero, state.mean),
+                       var=jnp.where(m, zero, state.var),
+                       active=state.active)
+
+
+def engine_attach(state: EngineState, slots) -> EngineState:
+    """Activate (and zero) the selected slots for new streams."""
+    m = slot_mask(slots, state.k.shape[0])
+    state = engine_reset(state, m)
+    return state._replace(active=jnp.logical_or(state.active, m))
+
+
+def engine_detach(state: EngineState, slots) -> EngineState:
+    """Deactivate the selected slots; their state is cleared and they
+    stop advancing (and flagging) until re-attached."""
+    m = slot_mask(slots, state.k.shape[0])
+    state = engine_reset(state, m)
+    return state._replace(active=jnp.logical_and(state.active, ~m))
+
+
+def engine_process(state: EngineState, x: jnp.ndarray, backend
+                   ) -> Tuple[EngineState, dict]:
+    """Advance the packed state through one (T, C) chunk.
+
+    `backend` follows the `engine.backends.Backend` contract (duck-typed
+    so this module stays a leaf).  Inactive slots are frozen (their
+    state does not advance) and never flag.  Returns
+    (state', {"ecc": (T, C), "outlier": (T, C) bool}) — `ecc` is in the
+    backend's native domain (Q int32 for "pallas-q").
+    """
+    kf, mf, vf, ecc, outlier = backend.process(x, state.k, state.mean,
+                                               state.var)
+    act = state.active
+    new = EngineState(
+        k=jnp.where(act, kf.astype(state.k.dtype), state.k),
+        mean=jnp.where(act, mf, state.mean),
+        var=jnp.where(act, vf, state.var),
+        active=act,
+    )
+    outs = {"ecc": ecc, "outlier": jnp.logical_and(outlier, act[None, :])}
+    return new, outs
+
+
+def engine_step(state: EngineState, x: jnp.ndarray,
+                m: float | jnp.ndarray = 3.0
+                ) -> Tuple[EngineState, TedaOutput]:
+    """Single-sample fast path: one packed update for x (C,).
+
+    The T=1 analog of `engine_process` for in-loop monitors (the train
+    guard, the decode monitor) — one `teda_step` on the packed vectors,
+    cheap enough to live inside a jitted train/decode step.  Float-state
+    only (the Q datapath goes through `engine_process`).
+    """
+    if jnp.issubdtype(state.k.dtype, jnp.integer):
+        raise TypeError(
+            "engine_step is float-state only; Q-format (int32) state "
+            "advances through engine_process with the 'pallas-q' backend")
+    ts, out = teda_step(
+        TedaState(k=state.k, mean=state.mean[:, None], var=state.var),
+        x[:, None], m)
+    act = state.active
+    new = EngineState(k=jnp.where(act, ts.k, state.k),
+                      mean=jnp.where(act, ts.mean[:, 0], state.mean),
+                      var=jnp.where(act, ts.var, state.var),
+                      active=act)
+    out = out._replace(outlier=jnp.logical_and(out.outlier, act))
+    return new, out

@@ -206,13 +206,15 @@ def teda_q_stream(x: jnp.ndarray, fmt: QFormat, m: float = 3.0,
 
 
 def teda_q_scan_chan(x: jnp.ndarray, fmt: QFormat, m: float = 3.0,
-                     k0: int = 0, mean0: Optional[jnp.ndarray] = None,
+                     k0=0, mean0: Optional[jnp.ndarray] = None,
                      var0: Optional[jnp.ndarray] = None):
     """Q-TEDA over (T, C) — C independent univariate channels.
 
     Pure-JAX `lax.scan` over `_q_step_u`, the exact function the integer
     Pallas kernel executes per row: the kernel output must match this
-    bit-for-bit.  Returns (final (k, mean, var), dict of (T, C) arrays).
+    bit-for-bit.  `k0` may be a scalar or a per-channel (C,) vector —
+    multi-tenant slots may sit at different stream positions.  Returns
+    (final (k, mean, var), dict of (T, C) arrays).
     """
     fmt.validate()
     if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating):
@@ -222,6 +224,9 @@ def teda_q_scan_chan(x: jnp.ndarray, fmt: QFormat, m: float = 3.0,
     t_len, c = xq.shape
     mean0 = jnp.zeros((c,), _I32) if mean0 is None else mean0.astype(_I32)
     var0 = jnp.zeros((c,), _I32) if var0 is None else var0.astype(_I32)
+    k0v = jnp.asarray(k0, _I32)
+    if k0v.ndim == 0:
+        k0v = jnp.broadcast_to(k0v, (c,))
     msq1 = msq1_const(fmt, m)
 
     def body(carry, inp):
@@ -233,11 +238,11 @@ def teda_q_scan_chan(x: jnp.ndarray, fmt: QFormat, m: float = 3.0,
                                  jnp.broadcast_to(thr, xr.shape),
                                  jnp.broadcast_to(outl, xr.shape))
 
-    ks = k0 + jnp.arange(1, t_len + 1, dtype=_I32)
+    ks = k0v[None, :] + jnp.arange(1, t_len + 1, dtype=_I32)[:, None]
     terms = _q_counter_terms(fmt, ks, msq1)
     (mean_f, var_f), (mean, var, ecc, zeta, thr, outl) = jax.lax.scan(
         body, (mean0, var0), (ks, xq) + terms)
-    final = (jnp.full((c,), k0 + t_len, _I32), mean_f, var_f)
+    final = (k0v + t_len, mean_f, var_f)
     outs = {"mean": mean, "var": var, "ecc": ecc, "zeta": zeta,
             "threshold": thr, "outlier": outl}
     return final, outs

@@ -1,8 +1,12 @@
-"""Jitted public wrapper around the TEDA Pallas kernel.
+"""Jitted public wrappers around the TEDA Pallas kernels.
 
-Handles layout (lane/sublane padding), state threading, dtype policy and
-interpret-mode selection; returns the same (TedaState, dict) contract as
-the rest of `repro.core`.
+One contract layer for all three kernel entry points (full float, slim
+verdict-only float, bit-accurate Q-format): `state_vectors` normalizes
+carried state to honest per-channel (C,) vectors — a per-channel `k` is
+preserved end-to-end, never collapsed to a shared scalar — and
+`_pad_layout` owns the lane/sublane padding.  The kernels mask padded
+time rows internally against the true valid length, so the final state
+is *always* returned, for every T (no `final=None` path remains).
 """
 from __future__ import annotations
 
@@ -18,7 +22,8 @@ from repro.fixedpoint.teda_q import msq1_const
 from repro.kernels.teda_scan import teda_pallas_call
 from repro.kernels.teda_q_scan import teda_q_pallas_call
 
-__all__ = ["teda_scan_tpu", "teda_q_scan_tpu", "default_interpret"]
+__all__ = ["teda_scan_tpu", "teda_scan_verdict", "teda_q_scan_tpu",
+           "default_interpret", "state_vectors"]
 
 
 def default_interpret() -> bool:
@@ -30,53 +35,74 @@ def _round_up(v: int, mult: int) -> int:
     return -(-v // mult) * mult
 
 
-def _pad_layout(x, init_a, init_b, block_t, lane_pad):
+def state_vectors(state: Optional[TedaState], c: int, dtype
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Normalize carried state to per-channel (k, mean, var) (C,) vectors.
+
+    Accepts `k` as a scalar or per-channel vector (multi-tenant slots sit
+    at different stream positions), `mean` as (C,), (C, 1) or scalar, and
+    `var` likewise.  This is the single state-layout definition shared by
+    every kernel wrapper and by `repro.engine`.
+    """
+    if state is None:
+        z = jnp.zeros((c,), dtype)
+        return z, z, z
+
+    def vec(v):
+        v = jnp.asarray(v, dtype)
+        v = v.reshape(-1) if v.ndim else v
+        return jnp.broadcast_to(v, (c,))
+
+    return vec(state.k), vec(state.mean), vec(state.var)
+
+
+def _pad_layout(x, rows, block_t, lane_pad):
     """Shared kernel-layout padding: time to block_t, lanes to lane_pad.
 
-    Returns the padded (x, init_a, init_b), the un-pad slice for
-    (T, C)-shaped outputs, and the padded time length.  All three
-    public wrappers route through this so the layout contract has one
-    definition.
+    `rows` are per-channel (C,) carry vectors, returned as padded (1, C')
+    rows.  Returns (padded x, padded rows, un-pad slice).  Every wrapper
+    routes through this so the layout contract has one definition; the
+    valid length is passed to the kernel, which masks the padded tail.
     """
     t_len, c = x.shape
     tp = _round_up(max(t_len, block_t), block_t)
     cp = _round_up(c, lane_pad)
     xp = jnp.pad(x, ((0, tp - t_len), (0, cp - c)))
-    ap = jnp.pad(init_a, ((0, 0), (0, cp - c)))
-    bp = jnp.pad(init_b, ((0, 0), (0, cp - c)))
-    return xp, ap, bp, (slice(0, t_len), slice(0, c)), tp
+    rp = tuple(jnp.pad(r.reshape(1, c), ((0, 0), (0, cp - c)))
+               for r in rows)
+    return xp, rp, (slice(0, t_len), slice(0, c))
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("block_t", "interpret", "lane_pad"))
-def _padded_call(x, scal, init_sum, init_var, *, block_t, interpret,
-                 lane_pad):
-    xp, sp, vp, sl, _ = _pad_layout(x, init_sum, init_var, block_t,
-                                    lane_pad)
-    mean, var, ecc, outlier = teda_pallas_call(
-        xp, scal, sp, vp, block_t=block_t, interpret=interpret)
-    return mean[sl], var[sl], ecc[sl], outlier[sl]
-
-
-@functools.partial(jax.jit,
-                   static_argnames=("block_t", "interpret", "lane_pad"))
-def _padded_verdict_call(x, scal, init_sum, init_var, *, block_t,
-                         interpret, lane_pad):
+                   static_argnames=("block_t", "interpret", "lane_pad",
+                                    "verdict_only"))
+def _padded_call(x, m, k0, sum0, var0, *, block_t, interpret, lane_pad,
+                 verdict_only):
     t_len, c = x.shape
-    xp, sp, vp, sl, tp = _pad_layout(x, init_sum, init_var, block_t,
-                                     lane_pad)
-    ecc, outlier, fsum, fvar = teda_pallas_call(
-        xp, scal, sp, vp, block_t=block_t, interpret=interpret,
-        verdict_only=True)
-    # final state must come from the last VALID row, not the padded tail:
-    # recompute it from the t_len-1 row semantics (padding adds zeros to
-    # the sum; subtracting nothing needed because mean = sum/k uses k of
-    # valid rows only when t_len % block_t == 0; otherwise derive from
-    # ecc/outlier outputs upstream). We simply return the padded-final
-    # carries when no padding was added, else None.
-    exact = tp == t_len
-    return ecc[sl], outlier[sl], (fsum[:, :c] if exact else None), (
-        fvar[:, :c] if exact else None)
+    xp, (kp, sp, vp), sl = _pad_layout(x, (k0, sum0, var0), block_t,
+                                       lane_pad)
+    scal = jnp.stack([jnp.asarray(m, jnp.float32), jnp.float32(t_len)])
+    outs = teda_pallas_call(xp, scal, kp, sp, vp, block_t=block_t,
+                            interpret=interpret, verdict_only=verdict_only)
+    rows, (fsum, fvar) = outs[:-2], outs[-2:]
+    return tuple(r[sl] for r in rows) + (fsum[0, :c], fvar[0, :c])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fmt", "block_t", "interpret",
+                                    "lane_pad"))
+def _padded_q_call(xq, msq1, k0, mean0, var0, *, fmt, block_t, interpret,
+                   lane_pad):
+    # zero-padded channels stay at mean=var=0 (var>0 guard absorbs them)
+    t_len, c = xq.shape
+    xp, (kp, mp, vp), sl = _pad_layout(xq, (k0, mean0, var0), block_t,
+                                       lane_pad)
+    scal = jnp.stack([jnp.asarray(msq1, jnp.int32), jnp.int32(t_len)])
+    mean, var, ecc, outlier, fmean, fvar = teda_q_pallas_call(
+        xp, scal, kp, mp, vp, fmt=fmt, block_t=block_t,
+        interpret=interpret)
+    return (mean[sl], var[sl], ecc[sl], outlier[sl],
+            fmean[0, :c], fvar[0, :c])
 
 
 def teda_scan_verdict(x: jnp.ndarray, m: float | jnp.ndarray = 3.0,
@@ -84,33 +110,24 @@ def teda_scan_verdict(x: jnp.ndarray, m: float | jnp.ndarray = 3.0,
                       block_t: int = 256,
                       interpret: Optional[bool] = None,
                       lane_pad: int = 128):
-    """Slim-output TEDA kernel: (ecc, outlier[, final state]).
+    """Slim-output TEDA kernel: (final state, {ecc, outlier}).
 
     HBM write traffic per sample drops from 16B (mean+var+ecc+i32 flag)
     to 5B (ecc + i8 flag) — the memory-roofline optimization recorded in
-    EXPERIMENTS.md §Perf. Final state is returned only when T divides
-    block_t exactly (the monitoring hot path uses fixed-size chunks).
+    EXPERIMENTS.md §Perf.  The kernel masks padded time rows against the
+    valid length, so a bit-exact final state is returned for every T —
+    this is the engine's float hot path.
     """
     if interpret is None:
         interpret = default_interpret()
+    x = jnp.asarray(x)
     t_len, c = x.shape
-    if state is None:
-        k0 = jnp.float32(0.0)
-        init_sum = jnp.zeros((1, c), jnp.float32)
-        init_var = jnp.zeros((1, c), jnp.float32)
-    else:
-        k0 = state.k.reshape(-1)[0].astype(jnp.float32)
-        init_sum = (state.mean[..., 0] * state.k).reshape(1, c)
-        init_var = state.var.reshape(1, c)
-    scal = jnp.stack([jnp.asarray(m, jnp.float32), k0])
-    ecc, outlier, fsum, fvar = _padded_verdict_call(
-        x, scal, init_sum, init_var, block_t=block_t,
-        interpret=interpret, lane_pad=lane_pad)
-    final = None
-    if fsum is not None:
-        kf = k0 + t_len
-        final = TedaState(k=jnp.full((c,), kf),
-                          mean=(fsum[0] / kf)[:, None], var=fvar[0])
+    k0, mean0, var0 = state_vectors(state, c, jnp.float32)
+    ecc, outlier, fsum, fvar = _padded_call(
+        x, m, k0, mean0 * k0, var0, block_t=block_t,
+        interpret=interpret, lane_pad=lane_pad, verdict_only=True)
+    kf = k0 + t_len
+    final = TedaState(k=kf, mean=(fsum / kf)[:, None], var=fvar)
     return final, {"ecc": ecc, "outlier": outlier.astype(bool)}
 
 
@@ -120,52 +137,30 @@ def teda_scan_tpu(x: jnp.ndarray, m: float | jnp.ndarray = 3.0,
                   lane_pad: int = 128) -> Tuple[TedaState, dict]:
     """TEDA over x (T, C) — C independent univariate streams.
 
-    Returns (final TedaState with mean (C, 1) / var (C,), outputs dict of
-    (T, C) arrays: mean, var, ecc, zeta, threshold, outlier).
+    Returns (final TedaState with k (C,) / mean (C, 1) / var (C,),
+    outputs dict of (T, C) arrays: mean, var, ecc, zeta, threshold,
+    outlier).  Per-channel state (including k) carries exactly across
+    calls for arbitrary chunk lengths.
     """
     if interpret is None:
         interpret = default_interpret()
+    x = jnp.asarray(x)
     t_len, c = x.shape
-    if state is None:
-        k0 = jnp.float32(0.0)
-        init_sum = jnp.zeros((1, c), jnp.float32)
-        init_var = jnp.zeros((1, c), jnp.float32)
-    else:
-        k0 = state.k.reshape(-1)[0].astype(jnp.float32)
-        init_sum = (state.mean[..., 0] * state.k).reshape(1, c)
-        init_var = state.var.reshape(1, c)
-    scal = jnp.stack([jnp.asarray(m, jnp.float32), k0])
+    k0, mean0, var0 = state_vectors(state, c, jnp.float32)
 
-    mean, var, ecc, outlier = _padded_call(
-        x, scal, init_sum, init_var, block_t=block_t,
-        interpret=interpret, lane_pad=lane_pad)
+    mean, var, ecc, outlier, fsum, fvar = _padded_call(
+        x, m, k0, mean0 * k0, var0, block_t=block_t,
+        interpret=interpret, lane_pad=lane_pad, verdict_only=False)
 
-    k_all = k0 + jnp.arange(1, t_len + 1, dtype=jnp.float32)
+    k_all = k0[None, :] + jnp.arange(1, t_len + 1,
+                                     dtype=jnp.float32)[:, None]
     zeta = ecc * 0.5
-    thr = (jnp.asarray(m, jnp.float32) ** 2 + 1.0) / (2.0 * k_all)[:, None]
-    final = TedaState(
-        k=jnp.full((c,), k0 + t_len),
-        mean=mean[-1][:, None],
-        var=var[-1],
-    )
+    thr = (jnp.asarray(m, jnp.float32) ** 2 + 1.0) / (2.0 * k_all)
+    kf = k0 + t_len
+    final = TedaState(k=kf, mean=(fsum / kf)[:, None], var=fvar)
     outs = {"mean": mean, "var": var, "ecc": ecc, "zeta": zeta,
-            "threshold": jnp.broadcast_to(thr, ecc.shape),
-            "outlier": outlier.astype(bool)}
+            "threshold": thr, "outlier": outlier.astype(bool)}
     return final, outs
-
-
-# ------------------------------------------------------- Q-format kernel
-@functools.partial(jax.jit,
-                   static_argnames=("fmt", "block_t", "interpret",
-                                    "lane_pad"))
-def _padded_q_call(xq, scal, init_mean, init_var, *, fmt, block_t,
-                   interpret, lane_pad):
-    # zero-padded channels stay at mean=var=0 (var>0 guard absorbs them)
-    xp, mp, vp, sl, _ = _pad_layout(xq, init_mean, init_var, block_t,
-                                    lane_pad)
-    mean, var, ecc, outlier = teda_q_pallas_call(
-        xp, scal, mp, vp, fmt=fmt, block_t=block_t, interpret=interpret)
-    return mean[sl], var[sl], ecc[sl], outlier[sl]
 
 
 def teda_q_scan_tpu(x: jnp.ndarray, fmt: QFormat,
@@ -178,10 +173,11 @@ def teda_q_scan_tpu(x: jnp.ndarray, fmt: QFormat,
     Float input is quantized through `fmt`; int32 input is taken as
     already-quantized Q values.  Bit-exact with the pure-JAX
     `fixedpoint.teda_q_scan_chan` (same per-row step function).  The
-    final state is read from the last *valid* output row, so time
-    padding never leaks into carried state.  Returns (TedaState with Q
-    int32 mean (C, 1) / var (C,), outputs dict of (T, C) arrays: mean,
-    var, ecc, zeta, threshold — all Q int32 — and bool outlier).
+    kernel freezes the carried state on padded tail rows, so the final
+    state is exact — and always returned — for every T.  Returns
+    (TedaState with k (C,) int32, Q int32 mean (C, 1) / var (C,),
+    outputs dict of (T, C) arrays: mean, var, ecc, zeta, threshold — all
+    Q int32 — and bool outlier).
     """
     fmt.validate()
     if interpret is None:
@@ -191,31 +187,19 @@ def teda_q_scan_tpu(x: jnp.ndarray, fmt: QFormat,
     else:
         xq = jnp.asarray(x, jnp.int32)
     t_len, c = xq.shape
-    if state is None:
-        k0 = jnp.int32(0)
-        init_mean = jnp.zeros((1, c), jnp.int32)
-        init_var = jnp.zeros((1, c), jnp.int32)
-    else:
-        k0 = jnp.asarray(state.k).reshape(-1)[0].astype(jnp.int32)
-        init_mean = state.mean[..., 0].reshape(1, c).astype(jnp.int32)
-        init_var = state.var.reshape(1, c).astype(jnp.int32)
-    msq1 = jnp.asarray(msq1_const(fmt, m), jnp.int32)
-    scal = jnp.stack([msq1, k0])
+    k0, mean0, var0 = state_vectors(state, c, jnp.int32)
+    msq1 = msq1_const(fmt, m)
 
-    mean, var, ecc, outlier = _padded_q_call(
-        xq, scal, init_mean, init_var, fmt=fmt, block_t=block_t,
+    mean, var, ecc, outlier, fmean, fvar = _padded_q_call(
+        xq, msq1, k0, mean0, var0, fmt=fmt, block_t=block_t,
         interpret=interpret, lane_pad=lane_pad)
 
-    k_all = k0 + jnp.arange(1, t_len + 1, dtype=jnp.int32)
+    k_all = k0[None, :] + jnp.arange(1, t_len + 1,
+                                     dtype=jnp.int32)[:, None]
     zeta = ecc >> 1
-    thr = div_qi(fmt, jnp.broadcast_to(msq1, k_all.shape),
-                 2 * k_all)[:, None]
-    final = TedaState(
-        k=jnp.full((c,), k0 + t_len, jnp.int32),
-        mean=mean[-1][:, None],
-        var=var[-1],
-    )
+    thr = div_qi(fmt, jnp.broadcast_to(jnp.asarray(msq1, jnp.int32),
+                                       k_all.shape), 2 * k_all)
+    final = TedaState(k=k0 + t_len, mean=fmean[:, None], var=fvar)
     outs = {"mean": mean, "var": var, "ecc": ecc, "zeta": zeta,
-            "threshold": jnp.broadcast_to(thr, ecc.shape),
-            "outlier": outlier.astype(bool)}
+            "threshold": thr, "outlier": outlier.astype(bool)}
     return final, outs

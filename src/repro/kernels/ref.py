@@ -8,7 +8,6 @@ streams (the kernel's layout: time on sublanes, channels on lanes).
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["teda_ref"]

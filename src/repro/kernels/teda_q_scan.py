@@ -15,7 +15,11 @@ bit-exact with the pure-JAX Q scan by construction.
 
 Layout contract (enforced by ops.py):
   x: (T, C) int32 Q-values, T % block_t == 0, C % 128 == 0,
-  block_t % 8 == 0.  SMEM scalars: [msq1_q, k0] int32.
+  block_t % 8 == 0.  SMEM scalars: [msq1_q, t_valid] int32.  The
+  per-channel counter offset `k0` is a (1, C) int32 carry row (slots may
+  sit at different stream positions).  Rows at global index >= t_valid
+  are masked: the mean/var carries freeze, so the final-state rows —
+  always emitted as (1, C) outputs — are exact for every t_valid.
 """
 from __future__ import annotations
 
@@ -33,8 +37,9 @@ from repro.kernels.teda_scan import tpu_compiler_params
 __all__ = ["teda_q_scan_kernel", "teda_q_pallas_call"]
 
 
-def teda_q_scan_kernel(scal_ref, x_ref, init_mean_ref, init_var_ref,
-                       mean_ref, var_ref, ecc_ref, outlier_ref,
+def teda_q_scan_kernel(scal_ref, x_ref, init_k_ref, init_mean_ref,
+                       init_var_ref, mean_ref, var_ref, ecc_ref,
+                       outlier_ref, fmean_ref, fvar_ref,
                        mean_carry, var_carry, *, block_t: int,
                        fmt: QFormat):
     i = pl.program_id(0)
@@ -45,7 +50,8 @@ def teda_q_scan_kernel(scal_ref, x_ref, init_mean_ref, init_var_ref,
         var_carry[...] = init_var_ref[...]
 
     msq1 = scal_ref[0]
-    k0 = scal_ref[1]
+    t_valid = scal_ref[1]
+    k0 = init_k_ref[...]  # (1, C) int32 per-channel counter offset
 
     # counter-only dividers for the whole chunk, vectorized over rows
     # (one bit-serial pass instead of one per row; bit-identical values)
@@ -55,7 +61,9 @@ def teda_q_scan_kernel(scal_ref, x_ref, init_mean_ref, init_var_ref,
 
     def row(r, carry):
         mean, var = carry  # (1, C) int32 Q
-        k = k0 + i * block_t + r + 1  # the FPGA's counter register
+        g = i * block_t + r            # global row index
+        k = k0 + g + 1                 # the FPGA's counter register, (1, C)
+        valid = g < t_valid
         xr = x_ref[pl.ds(r, 1), :]
         terms = tuple(jax.lax.dynamic_slice_in_dim(t, r, 1, 0)
                       for t in (rk_b, inv_b, thr_b))
@@ -65,18 +73,28 @@ def teda_q_scan_kernel(scal_ref, x_ref, init_mean_ref, init_var_ref,
         var_ref[pl.ds(r, 1), :] = var_n
         ecc_ref[pl.ds(r, 1), :] = ecc
         outlier_ref[pl.ds(r, 1), :] = outl.astype(jnp.int8)
-        return mean_n, var_n
+        # padded tail rows must not advance the carried state
+        return (jnp.where(valid, mean_n, mean),
+                jnp.where(valid, var_n, var))
 
     mean, var = jax.lax.fori_loop(
         0, block_t, row, (mean_carry[...], var_carry[...]))
     mean_carry[...] = mean
     var_carry[...] = var
+    fmean_ref[...] = mean
+    fvar_ref[...] = var
 
 
 def teda_q_pallas_call(x: jnp.ndarray, scal: jnp.ndarray,
-                       init_mean: jnp.ndarray, init_var: jnp.ndarray,
-                       *, fmt: QFormat, block_t: int, interpret: bool):
-    """Raw pallas_call. x (T, C) int32 pre-padded; scal = [msq1, k0]."""
+                       init_k: jnp.ndarray, init_mean: jnp.ndarray,
+                       init_var: jnp.ndarray, *, fmt: QFormat,
+                       block_t: int, interpret: bool):
+    """Raw pallas_call. x (T, C) int32 pre-padded; scal = [msq1, t_valid];
+    init_k / init_mean / init_var are (1, C) int32 carry rows.
+
+    Returns (mean, var, ecc, outlier, final_mean, final_var); the final
+    rows are always populated (state after t_valid valid rows).
+    """
     t_len, c = x.shape
     assert t_len % block_t == 0 and block_t % 8 == 0 and c % 128 == 0, (
         "ops.py must pad: T % block_t == 0, block_t % 8 == 0, C % 128 == 0")
@@ -89,6 +107,8 @@ def teda_q_pallas_call(x: jnp.ndarray, scal: jnp.ndarray,
         jax.ShapeDtypeStruct((t_len, c), jnp.int32),  # var (Q)
         jax.ShapeDtypeStruct((t_len, c), jnp.int32),  # ecc (Q)
         jax.ShapeDtypeStruct((t_len, c), jnp.int8),   # outlier flag
+        jax.ShapeDtypeStruct((1, c), jnp.int32),      # final mean (Q)
+        jax.ShapeDtypeStruct((1, c), jnp.int32),      # final var (Q)
     ]
     kernel = functools.partial(teda_q_scan_kernel, block_t=block_t,
                                fmt=fmt)
@@ -102,10 +122,12 @@ def teda_q_pallas_call(x: jnp.ndarray, scal: jnp.ndarray,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),  # scal (2,) int32
             row_spec,    # x
+            carry_spec,  # init_k
             carry_spec,  # init_mean
             carry_spec,  # init_var
         ],
-        out_specs=[row_spec, row_spec, row_spec, row_spec],
+        out_specs=[row_spec, row_spec, row_spec, row_spec,
+                   carry_spec, carry_spec],
         out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((1, c), jnp.int32),  # running mean carry
@@ -113,4 +135,4 @@ def teda_q_pallas_call(x: jnp.ndarray, scal: jnp.ndarray,
         ],
         compiler_params=compiler_params,
         interpret=interpret,
-    )(scal, x, init_mean, init_var)
+    )(scal, x, init_k, init_mean, init_var)

@@ -11,7 +11,13 @@ across the 128-lane channel axis, so every VPU "cycle" retires
 Layout contract (enforced by ops.py):
   x: (T, C) with T % block_t == 0, C % 128 == 0, block_t % 8 == 0.
 Carried state (running sum, running variance per channel) lives in VMEM
-scratch across grid steps; `k0`/`m` arrive as SMEM scalars.
+scratch across grid steps.  `m` and the valid length `t_valid` arrive as
+SMEM scalars; the per-channel iteration offset `k0` arrives as a (1, C)
+carry row, so every channel may sit at a different stream position
+(multi-tenant slots).  Rows at global index >= t_valid are masked
+in-kernel (sum += 0; variance map = identity), so the final carries —
+always emitted as (1, C) outputs — hold the state after exactly t_valid
+valid samples regardless of time padding.
 """
 from __future__ import annotations
 
@@ -72,18 +78,19 @@ def _affine_scan_rows(a: jnp.ndarray, b: jnp.ndarray):
     return a, b
 
 
-def teda_scan_kernel(scal_ref, x_ref, init_sum_ref, init_var_ref,
-                     *out_refs, block_t: int, verdict_only: bool = False):
+def teda_scan_kernel(scal_ref, x_ref, init_k_ref, init_sum_ref,
+                     init_var_ref, *out_refs, block_t: int,
+                     verdict_only: bool = False):
     if verdict_only:
-        # slim outputs: (ecc, outlier, state_sum, state_var) — HBM write
+        # slim outputs: (ecc, outlier, final_sum, final_var) — HBM write
         # traffic drops from 16B to ~5B per sample (see EXPERIMENTS §Perf)
         ecc_ref, outlier_ref, fsum_ref, fvar_ref = out_refs[:4]
         sum_carry, var_carry = out_refs[4:]
         mean_ref = var_ref = None
     else:
-        mean_ref, var_ref, ecc_ref, outlier_ref = out_refs[:4]
-        sum_carry, var_carry = out_refs[4:]
-        fsum_ref = fvar_ref = None
+        (mean_ref, var_ref, ecc_ref, outlier_ref, fsum_ref,
+         fvar_ref) = out_refs[:6]
+        sum_carry, var_carry = out_refs[6:]
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -92,22 +99,28 @@ def teda_scan_kernel(scal_ref, x_ref, init_sum_ref, init_var_ref,
         var_carry[...] = init_var_ref[...].astype(jnp.float32)
 
     m = scal_ref[0]
-    k0 = scal_ref[1]
+    t_valid = scal_ref[1]
 
     x = x_ref[...].astype(jnp.float32)  # (bt, C)
     bt, c = x.shape
+    k0 = init_k_ref[...].astype(jnp.float32)  # (1, C) per-channel offset
     t = jax.lax.broadcasted_iota(jnp.float32, (bt, 1), 0)
-    k = k0 + (i * block_t) + t + 1.0  # global iteration index, (bt, 1)
+    g = i * block_t + t               # global row index, (bt, 1)
+    valid = g < t_valid               # padded-tail mask, (bt, 1)
+    k = k0 + g + 1.0                  # per-channel iteration index, (bt, C)
 
     # ---- MEAN module: eq (2) as a prefix sum ---------------------------
-    s = _cumsum_rows(x) + sum_carry[...]
+    # Invalid rows contribute nothing, so the running sum freezes at the
+    # last valid sample and the final carry is exact for every t_valid.
+    s = _cumsum_rows(jnp.where(valid, x, 0.0)) + sum_carry[...]
     mean = s / k
 
     # ---- VARIANCE module: eq (3) as an affine scan ---------------------
     d2 = (x - mean) ** 2
     first = k <= 1.0
-    d2 = jnp.where(first, 0.0, d2)
+    d2 = jnp.where(jnp.logical_or(first, ~valid), 0.0, d2)
     a = jnp.broadcast_to(jnp.where(first, 0.0, (k - 1.0) / k), (bt, c))
+    a = jnp.where(valid, a, 1.0)  # identity map on padded rows
     b = d2 / k
     av, bv = _affine_scan_rows(a, b)
     var = av * var_carry[...] + bv
@@ -122,23 +135,29 @@ def teda_scan_kernel(scal_ref, x_ref, init_sum_ref, init_var_ref,
     if verdict_only:
         ecc_ref[...] = ecc
         outlier_ref[...] = outlier.astype(jnp.int8)
-        fsum_ref[...] = s[block_t - 1:block_t]
-        fvar_ref[...] = var[block_t - 1:block_t]
     else:
         mean_ref[...] = mean
         var_ref[...] = var
         ecc_ref[...] = ecc
         outlier_ref[...] = outlier.astype(jnp.int32)
 
+    fsum_ref[...] = s[block_t - 1:block_t]
+    fvar_ref[...] = var[block_t - 1:block_t]
     sum_carry[...] = s[block_t - 1:block_t]
     var_carry[...] = var[block_t - 1:block_t]
 
 
 def teda_pallas_call(x: jnp.ndarray, scal: jnp.ndarray,
-                     init_sum: jnp.ndarray, init_var: jnp.ndarray,
-                     *, block_t: int, interpret: bool,
-                     verdict_only: bool = False):
-    """Raw pallas_call. x (T, C) pre-padded; scal = [m, k0] f32 (2,)."""
+                     init_k: jnp.ndarray, init_sum: jnp.ndarray,
+                     init_var: jnp.ndarray, *, block_t: int,
+                     interpret: bool, verdict_only: bool = False):
+    """Raw pallas_call. x (T, C) pre-padded; scal = [m, t_valid] f32 (2,);
+    init_k / init_sum / init_var are (1, C) per-channel carry rows.
+
+    Returns (mean, var, ecc, outlier, final_sum, final_var) or, with
+    verdict_only, (ecc, outlier, final_sum, final_var).  The final
+    carries are always populated (state after t_valid valid rows).
+    """
     t_len, c = x.shape
     assert t_len % block_t == 0 and block_t % 8 == 0 and c % 128 == 0, (
         "ops.py must pad: T % block_t == 0, block_t % 8 == 0, C % 128 == 0")
@@ -160,8 +179,11 @@ def teda_pallas_call(x: jnp.ndarray, scal: jnp.ndarray,
             jax.ShapeDtypeStruct((t_len, c), jnp.float32),  # var
             jax.ShapeDtypeStruct((t_len, c), jnp.float32),  # ecc
             jax.ShapeDtypeStruct((t_len, c), jnp.int32),    # outlier
+            jax.ShapeDtypeStruct((1, c), jnp.float32),      # final sum
+            jax.ShapeDtypeStruct((1, c), jnp.float32),      # final var
         ]
-        out_specs = [row_spec, row_spec, row_spec, row_spec]
+        out_specs = [row_spec, row_spec, row_spec, row_spec,
+                     carry_spec, carry_spec]
     kernel = functools.partial(teda_scan_kernel, block_t=block_t,
                                verdict_only=verdict_only)
     compiler_params = None
@@ -174,6 +196,7 @@ def teda_pallas_call(x: jnp.ndarray, scal: jnp.ndarray,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),  # scal (2,)
             row_spec,  # x
+            carry_spec,  # init_k
             carry_spec,  # init_sum
             carry_spec,  # init_var
         ],
@@ -185,4 +208,4 @@ def teda_pallas_call(x: jnp.ndarray, scal: jnp.ndarray,
         ],
         compiler_params=compiler_params,
         interpret=interpret,
-    )(scal, x, init_sum, init_var)
+    )(scal, x, init_k, init_sum, init_var)

@@ -257,7 +257,6 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
              accum_steps: int | None = None,
              opt_overrides=None, hints: bool = False,
              rule_flags=None) -> dict:
-    import dataclasses as _dc
 
     from repro.launch.specs import pick_accum_steps
     from repro.optim import adamw

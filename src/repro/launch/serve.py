@@ -1,10 +1,16 @@
 """Batched serving driver with TEDA decode-stream monitoring.
 
 Serves a (reduced or full) LM: prefills a prompt batch, then decodes with
-the KV-cache path while a multichannel TEDA state watches per-request
+the KV-cache path while a multichannel TEDA engine watches per-request
 telemetry (logit entropy, max-logit) — flagged requests are surfaced the
 way a production gateway would quarantine degenerate generations
 (repetition collapse, NaN logits, prompt-injection-style OOD inputs).
+
+The telemetry (log-softmax entropy, max-logit), the packed TEDA monitor
+update (`repro.engine.engine_step`, one slot per request x channel), the
+flag accumulation and the next-token selection all run *inside* the
+jitted decode step: the Python loop only threads device arrays, so a
+generated token costs one dispatch and no host round-trip.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b \
         --scale tiny --batch 4 --prompt-len 32 --gen 32
@@ -12,6 +18,7 @@ way a production gateway would quarantine degenerate generations
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 import jax
@@ -19,9 +26,39 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config
-from repro.core import TedaState, teda_init, teda_step
-from repro.models import (init_cache, init_lm_params, lm_decode_step,
-                          lm_forward)
+from repro.engine import engine_init, engine_step
+from repro.models import init_cache, init_lm_params, lm_decode_step
+
+N_CHANNELS = 2  # per-request telemetry: (entropy, max-logit)
+
+
+def make_decode_step(cfg, m: float, greedy: bool):
+    """Build the fused decode+monitor step (one compiled program).
+
+    Carries (tokens, caches, engine state, per-request flags) on device;
+    returns the sampled token plus the advanced monitor state.
+    """
+
+    @functools.partial(jax.jit, donate_argnums=(3, 4, 5))
+    def step(params, tok, pos, caches, mon, flagged, key):
+        logits, caches = lm_decode_step(params, tok, pos, caches, cfg)
+        # --- telemetry, fused with the decode step (no host hop) -----
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ent = -jnp.sum(jnp.exp(logp) * logp, axis=-1)        # (B,)
+        mx = jnp.max(logits, axis=-1)                        # (B,)
+        metrics = jnp.stack([ent, mx], -1).reshape(-1)       # (B*2,)
+        # --- packed TEDA monitor: one slot per request x channel -----
+        mon, verdict = engine_step(mon, metrics, m)
+        flagged = jnp.logical_or(
+            flagged, verdict.outlier.reshape(-1, N_CHANNELS).any(-1))
+        if greedy:
+            nxt = jnp.argmax(logits, axis=-1)
+        else:
+            nxt = jax.random.categorical(jax.random.fold_in(key, pos),
+                                         logits)
+        return nxt, caches, mon, flagged
+
+    return step
 
 
 def serve(cfg, batch: int, prompt_len: int, gen: int, m: float = 3.5,
@@ -36,41 +73,34 @@ def serve(cfg, batch: int, prompt_len: int, gen: int, m: float = 3.5,
     decode = jax.jit(
         lambda p, t, pos, c: lm_decode_step(p, t, pos, c, cfg),
         donate_argnums=(3,))
+    step = make_decode_step(cfg, m, greedy)
 
     # prefill by teacher-forcing the prompt through the decode path
     # (keeps one compiled program; a production server would lower a
     # separate chunked-prefill program as in launch/specs.py)
-    tok = prompts[:, 0]
     t0 = time.perf_counter()
     for i in range(prompt_len - 1):
-        logits, caches = decode(params, prompts[:, i], jnp.int32(i), caches)
+        _, caches = decode(params, prompts[:, i], jnp.int32(i), caches)
+    jax.block_until_ready(caches)
     prefill_s = time.perf_counter() - t0
 
-    # TEDA monitor: 2 channels (entropy, max-logit) per request
-    teda = teda_init((batch, 2), 1)
-    flagged = np.zeros(batch, bool)
+    # TEDA monitor: (batch * 2) packed channels, advanced inside `step`
+    mon = engine_init(batch * N_CHANNELS)
+    flagged = jnp.zeros((batch,), bool)
     outs = []
     tok = prompts[:, -1]
     t0 = time.perf_counter()
-    for step in range(gen):
-        pos = jnp.int32(prompt_len - 1 + step)
-        logits, caches = decode(params, tok, pos, caches)
-        logp = jax.nn.log_softmax(logits, axis=-1)
-        ent = -jnp.sum(jnp.exp(logp) * logp, axis=-1)  # (B,)
-        mx = jnp.max(logits, axis=-1)
-        metrics = jnp.stack([ent, mx], axis=-1)[..., None]  # (B, 2, 1)
-        teda, verdict = teda_step(teda, metrics, m)
-        flagged |= np.asarray(verdict.outlier).any(axis=-1)
-        tok = (jnp.argmax(logits, axis=-1) if greedy else
-               jax.random.categorical(jax.random.fold_in(key, step),
-                                      logits))
-        outs.append(np.asarray(tok))
+    for i in range(gen):
+        pos = jnp.int32(prompt_len - 1 + i)
+        tok, caches, mon, flagged = step(params, tok, pos, caches, mon,
+                                         flagged, key)
+        outs.append(tok)
+    toks_out = np.stack([np.asarray(t) for t in outs], axis=1)
     decode_s = time.perf_counter() - t0
 
-    toks_out = np.stack(outs, axis=1)
     return {
         "tokens": toks_out,
-        "flagged_requests": np.flatnonzero(flagged).tolist(),
+        "flagged_requests": np.flatnonzero(np.asarray(flagged)).tolist(),
         "prefill_tok_s": batch * (prompt_len - 1) / prefill_s,
         "decode_tok_s": batch * gen / decode_s,
     }

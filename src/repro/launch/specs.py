@@ -9,7 +9,7 @@ real arrays.
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict, NamedTuple, Tuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,12 +17,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.registry import ShapeSpec, get_config
 from repro.core.guard import GuardConfig, guard_init, guard_step
-from repro.models import (build_cross_cache, encdec_decode_step, encdec_loss,
-                          init_cache, init_encdec_cache, init_encdec_params,
+from repro.models import (encdec_decode_step, encdec_loss, init_cache,
+                          init_encdec_cache, init_encdec_params,
                           init_lm_params, lm_decode_step, lm_loss, lm_prefill)
 from repro.models.common import ModelConfig
 from repro.optim import adamw
-from repro.sharding.rules import (batch_spec, dp_axes, params_shardings,
+from repro.sharding.rules import (batch_spec, params_shardings,
                                   state_cache_shardings)
 
 GUARD_CFG = GuardConfig(m=3.0, warmup_steps=50, channels=2)
@@ -118,7 +118,6 @@ def pick_accum_steps(mesh: Mesh, global_batch: int, seq_len: int,
     """Smallest divisor k of the per-dp-shard batch such that each
     microbatch holds <= budget token-dims (tokens x d_model) per
     data-parallel shard — activation memory scales with that product."""
-    import numpy as np
     target_tokens_per_row = max(1024, token_dim_budget // max(d_model, 1))
     sizes = dict(mesh.shape)
     dp_total = 1

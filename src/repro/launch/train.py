@@ -18,24 +18,21 @@ Usage (CPU example):
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.registry import get_config
-from repro.core.guard import GuardConfig, StragglerDetector, guard_init
+from repro.core.guard import StragglerDetector, guard_init
 from repro.data import TokenStream
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.launch.specs import GUARD_CFG, make_train_step
 from repro.models import init_encdec_params, init_lm_params
 from repro.optim import adamw
-from repro.sharding.rules import batch_spec, params_shardings
+from repro.sharding.rules import batch_spec
 
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 
 def build_state(cfg, key):
@@ -64,7 +61,6 @@ def train(cfg, steps: int, batch: int, seq: int, ckpt_dir: str | None,
         start_step = meta["step"]
         print(f"[train] resumed from step {start_step}")
 
-    p_sh = params_shardings(mesh, params)
     b_sh = NamedSharding(mesh, batch_spec(mesh, batch))
     with mesh:
         jitted = jax.jit(step_fn, donate_argnums=(0, 1, 2))

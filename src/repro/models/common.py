@@ -7,7 +7,7 @@ Configs in `repro.configs` instantiate it with the exact published values.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax.numpy as jnp
 

@@ -17,7 +17,7 @@ from repro.models.attention import (KVCache, attend_train, attention_init,
 from repro.models.common import ModelConfig, vocab_padded
 from repro.models.layers import (dense, embed, embedding_init, layernorm,
                                  layernorm_init, rmsnorm, rmsnorm_init,
-                                 softcap, unembed)
+                                 unembed)
 from repro.models.mlp import mlp, mlp_init
 from repro.sharding.hints import maybe_shard
 

@@ -19,7 +19,6 @@ Families map to group layouts in `block_layout(cfg)`.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
@@ -34,12 +33,11 @@ from repro.models.layers import (dense, dense_init, embed, embedding_init,
 from repro.models.mlp import mlp, mlp_init
 from repro.models.moe import moe, moe_init
 from repro.sharding.hints import maybe_shard
-from repro.models.ssm import (SSMCache, ssm_cache_init, ssm_decode_step,
+from repro.models.ssm import (ssm_cache_init, ssm_decode_step,
                               ssm_forward, ssm_init)
-from repro.models.xlstm import (MLSTMCache, SLSTMCache, mlstm_cache_init,
-                                mlstm_decode_step, mlstm_forward, mlstm_init,
-                                slstm_cache_init, slstm_decode_step,
-                                slstm_forward, slstm_init)
+from repro.models.xlstm import (mlstm_cache_init, mlstm_decode_step,
+                                mlstm_forward, mlstm_init, slstm_cache_init,
+                                slstm_decode_step, slstm_forward, slstm_init)
 
 
 # ------------------------------------------------------------- layouts --

@@ -21,7 +21,7 @@ pod where ICI is fast — grads cross DCN once per step). All rules are
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import numpy as np
@@ -96,6 +96,27 @@ def shard_map_compat(f, mesh, in_specs, out_specs, check: bool = False):
     elif "check_rep" in params:
         kw["check_rep"] = check
     return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def make_channel_fanout(fn, mesh: Mesh, axis_name: str = "data"):
+    """shard_map fan-out of an independent-channel stream processor.
+
+    `fn(x, k, mean, var, active) -> ((k', mean', var'), (ecc, outlier))`
+    — the `repro.engine` backend contract: x is (T, C) with C
+    independent univariate streams on the lane axis, the state rows are
+    (C,) vectors, and the per-sample outputs are (T, C).  Channels are
+    independent TEDA modules (the paper's replicated-module scaling,
+    §5.2.1), so the fan-out needs no collectives: each device runs `fn`
+    on its C/D channel slice.  The caller must keep C divisible by the
+    axis size (StreamEngine asserts this).
+    """
+    vec = P(axis_name)
+    row = P(None, axis_name)
+    return shard_map_compat(
+        fn, mesh=mesh,
+        in_specs=(row, vec, vec, vec, vec),
+        out_specs=((vec, vec, vec), (row, row)),
+    )
 
 
 def dp_axes(mesh: Mesh) -> Tuple[str, ...]:

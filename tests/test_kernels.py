@@ -5,7 +5,7 @@ import pytest
 
 from conftest import given_or_cases
 
-from repro.core.teda import TedaState
+
 from repro.kernels.ops import teda_scan_tpu
 from repro.kernels.ref import teda_ref
 
@@ -155,25 +155,31 @@ def test_verdict_only_matches_numpy_oracle():
                                rtol=5e-4, atol=1e-5)
     # the raw kernel emits an int8 flag (the 5B/sample HBM-write claim)
     xp = jnp.asarray(np.pad(x, ((0, 0), (0, 125))))
-    scal = jnp.asarray([3.0, 0.0], jnp.float32)
+    scal = jnp.asarray([3.0, float(x.shape[0])], jnp.float32)
     zero = jnp.zeros((1, 128), jnp.float32)
-    _, flag8, _, _ = teda_pallas_call(xp, scal, zero, zero, block_t=64,
-                                      interpret=True, verdict_only=True)
+    _, flag8, _, _ = teda_pallas_call(xp, scal, zero, zero, zero,
+                                      block_t=64, interpret=True,
+                                      verdict_only=True)
     assert flag8.dtype == jnp.int8
     np.testing.assert_array_equal(np.asarray(flag8[:, :3]).astype(bool),
                                   ref["outlier"])
 
 
-def test_verdict_only_no_final_state_when_padded():
-    """T % block_t != 0: the slim path must not hand back a final state
-    contaminated by padded rows."""
+def test_verdict_only_final_state_when_padded():
+    """T % block_t != 0: the kernel masks the padded tail in-kernel, so
+    the slim path hands back an exact final state for every T."""
     from repro.kernels.ops import teda_scan_verdict
     x = _x(70, 2, seed=24)
     fin, slim = teda_scan_verdict(jnp.asarray(x), 3.0, block_t=64)
-    assert fin is None
     ref = teda_ref(np.asarray(x, np.float32), 3.0)
     np.testing.assert_array_equal(np.asarray(slim["outlier"]),
                                   ref["outlier"])
+    assert fin is not None
+    np.testing.assert_allclose(np.asarray(fin.k), 70.0)
+    np.testing.assert_allclose(np.asarray(fin.mean[:, 0]), ref["mean"][-1],
+                               rtol=5e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fin.var), ref["var"][-1],
+                               rtol=5e-4, atol=1e-5)
 
 
 def test_verdict_only_state_carry():

@@ -1,17 +1,15 @@
 """Launch-layer tests: mesh builders, cell specs, mini dry-run, train loop,
 pipeline parallelism. Multi-device pieces run in subprocesses so the main
 pytest process keeps its single CPU device."""
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
-import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs.registry import ShapeSpec, all_cells, get_config
+from repro.configs.registry import all_cells, get_config
 from repro.launch.train import train
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

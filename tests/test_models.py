@@ -164,7 +164,6 @@ def test_outer_scan_matches_flat_scan():
 def test_grad_accumulation_matches_full_batch():
     """k-micro accumulation == single-batch step (same update)."""
     from repro.launch.specs import make_train_step
-    from repro.core.guard import GuardConfig
     from repro.optim import adamw
     from repro.launch.specs import GUARD_CFG
     from repro.core.guard import guard_init

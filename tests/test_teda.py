@@ -2,7 +2,6 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from conftest import given_or_cases
 
