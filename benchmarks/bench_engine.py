@@ -80,7 +80,7 @@ def run(channels: int, chunk_sizes, total_t: int, backends, *,
     return rows
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--channels", type=int, default=128)
     ap.add_argument("--total-t", type=int, default=16384)
@@ -94,10 +94,13 @@ def main():
     ap.add_argument("--out", default=None, help="write JSON here")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes + interpret mode (CI rot guard)")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     if args.smoke:
-        channels, total_t, chunks, reps = 8, 64, [16, 32], 1
+        # big enough that each timed interval is tens of ms (median of
+        # 3 reps): the CI regression gate compares samples/s against a
+        # committed baseline, so the measurement must beat timer noise
+        channels, total_t, chunks, reps = 8, 256, [16, 32], 3
         interpret = True
     else:
         channels, total_t, reps = args.channels, args.total_t, args.reps
@@ -115,6 +118,7 @@ def main():
     if args.out:
         with open(args.out, "w") as f:
             f.write(text + "\n")
+    return doc
 
 
 if __name__ == "__main__":

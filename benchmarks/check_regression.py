@@ -1,0 +1,154 @@
+"""CI perf-regression gate: compare bench JSON against committed baselines.
+
+The runtime-vs-efficacy trade-off is a measured quantity (Choudhary et
+al., arXiv 1710.04735) — so CI enforces it instead of only checking
+correctness.  For every baseline under `benchmarks/baselines/`, the
+same-named file in `--current` is loaded, rows are matched on their
+identity keys (backend, chunk_t / offered_load, ...), and the gate
+fails when `samples_per_s` drops more than `--threshold` (default 25%)
+below the committed number for any row.  Malformed or empty bench JSON
+is itself a failure (exit 2): an empty rows list must never read as
+"no regression".
+
+    PYTHONPATH=src python benchmarks/run.py --only engine  --smoke --out-dir out
+    PYTHONPATH=src python benchmarks/run.py --only serving --smoke --out-dir out
+    python benchmarks/check_regression.py --current out
+
+Refresh the committed baselines after an intentional perf change with
+`--update` (runs the same validation, then copies current -> baselines).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+import shutil
+import sys
+
+# row fields that identify a configuration (everything else is measured)
+ID_KEYS = ("bench", "backend", "chunk_t", "offered_load", "channels")
+METRIC = "samples_per_s"
+
+
+class MalformedBench(ValueError):
+    pass
+
+
+def validate_doc(doc, name: str = "bench") -> list:
+    """Shape-check one bench JSON doc; returns its rows.
+
+    Raises MalformedBench on anything a silently-green gate could hide
+    behind: no rows, rows missing the metric, non-finite or
+    non-positive samples/s.
+    """
+    if not isinstance(doc, dict) or not isinstance(doc.get("rows"), list):
+        raise MalformedBench(f"{name}: not a bench doc (no rows list)")
+    rows = doc["rows"]
+    if not rows:
+        raise MalformedBench(f"{name}: empty rows — benchmark ran nothing")
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict) or "backend" not in row:
+            raise MalformedBench(f"{name} row {i}: missing backend")
+        v = row.get(METRIC)
+        if not isinstance(v, (int, float)) or not math.isfinite(v) or v <= 0:
+            raise MalformedBench(
+                f"{name} row {i} ({row.get('backend')}): bad {METRIC}={v!r}")
+    return rows
+
+
+def load_doc(path: pathlib.Path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise MalformedBench(f"{path}: unreadable JSON ({e})") from None
+
+
+def row_id(doc, row) -> tuple:
+    keys = {"bench": doc.get("bench")}
+    keys.update({k: row[k] for k in ID_KEYS if k in row})
+    return tuple(sorted(keys.items()))
+
+
+def compare(baseline_path: pathlib.Path, current_path: pathlib.Path,
+            threshold: float) -> list:
+    """Returns a list of result dicts, one per matched row."""
+    base_doc = load_doc(baseline_path)
+    cur_doc = load_doc(current_path)
+    base = {row_id(base_doc, r): r
+            for r in validate_doc(base_doc, str(baseline_path))}
+    cur = {row_id(cur_doc, r): r
+           for r in validate_doc(cur_doc, str(current_path))}
+    missing = sorted(set(base) - set(cur))
+    if missing:
+        raise MalformedBench(
+            f"{current_path}: missing {len(missing)} baseline rows, "
+            f"first: {dict(missing[0])}")
+    results = []
+    for rid, b in sorted(base.items()):
+        c = cur[rid]
+        ratio = c[METRIC] / b[METRIC]
+        results.append({
+            "id": dict(rid), "baseline": b[METRIC], "current": c[METRIC],
+            "ratio": ratio, "ok": ratio >= 1.0 - threshold})
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baselines", default="benchmarks/baselines",
+                    help="directory of committed baseline JSON files")
+    ap.add_argument("--current", required=True,
+                    help="directory of freshly produced bench JSON")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max allowed fractional samples/s regression")
+    ap.add_argument("--update", action="store_true",
+                    help="validate, then copy current over the baselines")
+    args = ap.parse_args(argv)
+
+    bdir = pathlib.Path(args.baselines)
+    cdir = pathlib.Path(args.current)
+    baselines = sorted(bdir.glob("*.json"))
+    if not baselines:
+        print(f"[regression] no baselines under {bdir}", file=sys.stderr)
+        return 2
+
+    if args.update:
+        for bpath in baselines:
+            cpath = cdir / bpath.name
+            validate_doc(load_doc(cpath), str(cpath))
+            shutil.copy(cpath, bpath)
+            print(f"[regression] updated {bpath} from {cpath}")
+        return 0
+
+    failed = False
+    for bpath in baselines:
+        cpath = cdir / bpath.name
+        if not cpath.exists():
+            print(f"[regression] FAIL {bpath.name}: {cpath} not produced",
+                  file=sys.stderr)
+            failed = True
+            continue
+        for res in compare(bpath, cpath, args.threshold):
+            tag = "ok  " if res["ok"] else "FAIL"
+            ident = {k: v for k, v in res["id"].items() if k != "bench"}
+            print(f"[regression] {tag} {bpath.name} {ident}: "
+                  f"{res['current']:.0f} vs baseline {res['baseline']:.0f} "
+                  f"samples/s (x{res['ratio']:.2f})")
+            failed = failed or not res["ok"]
+    if failed:
+        print(f"[regression] FAILED: >{args.threshold:.0%} samples/s "
+              "regression (or missing rows); if intentional, refresh "
+              "baselines with --update", file=sys.stderr)
+        return 1
+    print("[regression] all benchmarks within threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except MalformedBench as e:
+        print(f"[regression] MALFORMED: {e}", file=sys.stderr)
+        sys.exit(2)

@@ -1,15 +1,21 @@
 """Benchmark harness: one function per paper table.
 
-Prints ``name,us_per_call,derived`` CSV. Tables:
+CSV benchmarks print ``name,us_per_call,derived``. Tables:
   Table 2 / Figs 6-7  -> bench_detection  (fault detection validation)
   Table 3             -> bench_occupation (graph/VMEM occupation)
   Table 4             -> bench_throughput (processing time / SPS)
   Table 5             -> bench_platforms  (speedup vs software loop)
   Bit-accurate sim    -> bench_bitaccurate (Q-format word-length sweep)
 
-``bench_engine`` (StreamEngine samples/s vs chunk size x backend, the
-Table-5 serving analog) emits JSON rather than this CSV — run it
-standalone; CI runs ``bench_engine.py --smoke`` as its rot guard.
+JSON benchmarks (the Table-5 serving analogs) emit a samples/s table
+that `check_regression.py` gates in CI:
+  engine   -> bench_engine   (StreamEngine samples/s vs chunk x backend)
+  serving  -> bench_serving  (continuous batching vs offered load)
+
+Their output is validated here — empty or malformed rows exit nonzero,
+so the CI perf gate can never silently pass on a benchmark that ran
+nothing.  ``--only NAME`` runs a single benchmark; ``--smoke`` and
+``--out-dir`` forward to the JSON benchmarks.
 
 The roofline/dry-run tables (EXPERIMENTS.md §Roofline) are produced by
 ``python -m repro.launch.dryrun`` + ``benchmarks/roofline.py`` (they need
@@ -17,26 +23,87 @@ the 512-device environment and are cached under experiments/).
 """
 from __future__ import annotations
 
+import argparse
+import pathlib
 import sys
 import traceback
 
+# make sibling bench modules importable however run.py is invoked
+# (python benchmarks/run.py, python -m benchmarks.run, from CI)
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
 
-def main() -> None:
+CSV_BENCHES = ("detection", "occupation", "throughput", "platforms",
+               "bitaccurate")
+JSON_BENCHES = ("engine", "serving")
+
+
+def _run_csv(name: str) -> bool:
     import importlib
 
+    # import inside the runner: one broken benchmark (or its deps)
+    # must not keep the others from running
+    try:
+        mod = importlib.import_module(f"bench_{name}")
+        mod.main()
+        sys.stdout.flush()
+        return True
+    except Exception:
+        traceback.print_exc()
+        return False
+
+
+def _run_json(name: str, smoke: bool, out_dir) -> bool:
+    import importlib
+
+    from check_regression import MalformedBench, validate_doc
+
+    argv = []
+    if smoke:
+        argv.append("--smoke")
+    if out_dir is not None:
+        out_dir = pathlib.Path(out_dir)
+        out_dir.mkdir(parents=True, exist_ok=True)
+        suffix = "_smoke" if smoke else ""
+        argv += ["--out", str(out_dir / f"bench_{name}{suffix}.json")]
+    try:
+        mod = importlib.import_module(f"bench_{name}")
+        doc = mod.main(argv)
+        validate_doc(doc, f"bench_{name}")
+        sys.stdout.flush()
+        return True
+    except MalformedBench as e:
+        print(f"bench_{name}: malformed output: {e}", file=sys.stderr)
+        return False
+    except Exception:
+        traceback.print_exc()
+        return False
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=CSV_BENCHES + JSON_BENCHES,
+                    help="run a single benchmark")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for the JSON benchmarks (CI)")
+    ap.add_argument("--out-dir", default=None,
+                    help="write JSON benchmark output here")
+    ap.add_argument("--all", action="store_true",
+                    help="also run the JSON benchmarks at full scale "
+                         "(default: CSV benches only; JSON benches are "
+                         "heavy off-TPU unless --smoke)")
+    args = ap.parse_args(argv)
+
+    if args.only:
+        names = (args.only,)
+    else:
+        names = CSV_BENCHES + (JSON_BENCHES if args.all else ())
     failed = []
-    for name in ("bench_detection", "bench_occupation",
-                 "bench_throughput", "bench_platforms",
-                 "bench_bitaccurate"):
-        # import inside the loop: one broken benchmark (or its deps)
-        # must not keep the others from running
-        try:
-            mod = importlib.import_module(f"benchmarks.{name}")
-            mod.main()
-            sys.stdout.flush()
-        except Exception:
-            failed.append(name)
-            traceback.print_exc()
+    for name in names:
+        ok = (_run_json(name, args.smoke, args.out_dir)
+              if name in JSON_BENCHES else _run_csv(name))
+        if not ok:
+            failed.append(f"bench_{name}")
     if failed:
         raise SystemExit(f"benchmarks failed: {failed}")
 

@@ -15,10 +15,11 @@ from repro.engine.state import (EngineState, engine_attach, engine_detach,
 from repro.engine.backends import (Backend, get_backend, list_backends,
                                    register_backend)
 from repro.engine.engine import StreamEngine
+from repro.engine.pool import PoolFull, SlotPool
 
 __all__ = [
     "Backend", "get_backend", "list_backends", "register_backend",
-    "EngineState", "StreamEngine", "engine_init", "engine_process",
-    "engine_step", "engine_reset", "engine_attach", "engine_detach",
-    "slot_mask",
+    "EngineState", "StreamEngine", "SlotPool", "PoolFull",
+    "engine_init", "engine_process", "engine_step", "engine_reset",
+    "engine_attach", "engine_detach", "slot_mask",
 ]

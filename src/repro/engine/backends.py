@@ -27,10 +27,12 @@ from __future__ import annotations
 from typing import Callable, Dict, Optional, Tuple
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.scan import teda_scan
 from repro.core.teda import TedaState
 from repro.fixedpoint.qformat import QFormat
+from repro.fixedpoint.teda_q import msq1_const
 from repro.kernels.ops import teda_q_scan_tpu, teda_scan_verdict
 
 __all__ = ["Backend", "register_backend", "get_backend", "list_backends"]
@@ -41,20 +43,36 @@ _REGISTRY: Dict[str, Callable[..., "Backend"]] = {}
 class Backend:
     """Streaming detector contract.
 
-    `process(x, k, mean, var)` consumes one (T, C) chunk with carried
-    per-channel state vectors (C,) and returns
+    `process(x, k, mean, var, m=None)` consumes one (T, C) chunk with
+    carried per-channel state vectors (C,) and returns
     `(k', mean', var', ecc, outlier)` — the advanced state plus (T, C)
-    per-sample verdicts.  `state_dtype` is the dtype of the packed state
-    (int32 for the Q datapath, float32 otherwise); `ecc` is reported in
-    the backend's native domain (Q int32 for "pallas-q").
+    per-sample verdicts.  `m` overrides the constructed outlier
+    threshold per call: a scalar, or a per-channel (C,) vector so every
+    slot runs its own sensitivity level (per-tenant thresholds in one
+    batch).  `state_dtype` is the dtype of the packed state (int32 for
+    the Q datapath, float32 otherwise); `ecc` is reported in the
+    backend's native domain (Q int32 for "pallas-q").
     """
 
     name: str = "abstract"
     state_dtype = jnp.float32
 
     def process(self, x: jnp.ndarray, k: jnp.ndarray, mean: jnp.ndarray,
-                var: jnp.ndarray) -> Tuple[jnp.ndarray, ...]:
+                var: jnp.ndarray, m=None) -> Tuple[jnp.ndarray, ...]:
         raise NotImplementedError
+
+    def quantize_m(self, m):
+        """Host-side preparation of an m override before it is traced.
+
+        The engine calls this *outside* jit so backends can do exact
+        host arithmetic: the Q backend turns float m into its
+        bit-exact msq1 ROM constant here (float32 tracing would round
+        it).  Default: float32 as-is.
+        """
+        return np.asarray(m, np.float32)
+
+    def _m(self, m):
+        return self.m if m is None else m
 
 
 def register_backend(name: str):
@@ -96,8 +114,8 @@ class ScanBackend(Backend):
     def __init__(self, m: float = 3.0, **_ignored):
         self.m = m
 
-    def process(self, x, k, mean, var):
-        final, out = teda_scan(x[..., None], self.m,
+    def process(self, x, k, mean, var, m=None):
+        final, out = teda_scan(x[..., None], self._m(m),
                                _as_teda_state(k, mean, var))
         return final.k, final.mean[:, 0], final.var, out.ecc, out.outlier
 
@@ -117,9 +135,9 @@ class PallasBackend(Backend):
         self.interpret = interpret
         self.lane_pad = lane_pad
 
-    def process(self, x, k, mean, var):
+    def process(self, x, k, mean, var, m=None):
         final, out = teda_scan_verdict(
-            x, self.m, _as_teda_state(k, mean, var),
+            x, self._m(m), _as_teda_state(k, mean, var),
             block_t=self.block_t, interpret=self.interpret,
             lane_pad=self.lane_pad)
         return (final.k, final.mean[:, 0], final.var, out["ecc"],
@@ -145,9 +163,16 @@ class PallasQBackend(Backend):
         self.interpret = interpret
         self.lane_pad = lane_pad
 
-    def process(self, x, k, mean, var):
+    def quantize_m(self, m):
+        """Exact host msq1 (int32 Q) — `teda_q_scan_tpu` takes integer
+        m as the pre-quantized ROM constant, so per-slot thresholds get
+        the same bits as a scalar-m run (no float32 tracing rounding)."""
+        return np.asarray(msq1_const(self.fmt, np.asarray(m, np.float64)),
+                          np.int32)
+
+    def process(self, x, k, mean, var, m=None):
         final, out = teda_q_scan_tpu(
-            x, self.fmt, self.m, _as_teda_state(k, mean, var),
+            x, self.fmt, self._m(m), _as_teda_state(k, mean, var),
             block_t=self.block_t, interpret=self.interpret,
             lane_pad=self.lane_pad)
         return (final.k, final.mean[:, 0], final.var, out["ecc"],

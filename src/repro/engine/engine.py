@@ -4,9 +4,13 @@
 processes arbitrary-length (T, C) chunks as they arrive, carrying exact
 state across calls for every backend in the registry
 (`engine/backends.py`).  Multi-tenancy is ragged by construction: every
-slot has its own `k`, an `active` mask gates state advancement, and
-`attach` / `detach` / `reset` recycle a slot for a new tenant mid-flight
-without touching neighbours.
+slot has its own `k` and its own outlier threshold `m` (tenants run
+different sensitivity levels in one batch), an `active` mask gates
+state advancement, and `attach` / `detach` / `reset` recycle a slot for
+a new tenant mid-flight without touching neighbours.  `process` takes
+an optional per-call participation mask so a scheduler can freeze slots
+that have no data this step without releasing them (the
+continuous-batching suspend, `launch/batching.py`).
 
 With a `mesh`, chunk processing fans out over the channel axis via
 `shard_map` (`sharding.rules.make_channel_fanout`) — channels are
@@ -23,7 +27,8 @@ import numpy as np
 from repro.core.teda import TedaState
 from repro.engine.backends import get_backend
 from repro.engine.state import (EngineState, engine_attach, engine_detach,
-                                engine_init, engine_process, engine_reset)
+                                engine_init, engine_process, engine_reset,
+                                slot_mask)
 
 __all__ = ["StreamEngine"]
 
@@ -34,7 +39,7 @@ class StreamEngine:
     >>> eng = StreamEngine(capacity=256, backend="pallas", m=3.0)
     >>> verdicts = eng.process(chunk)          # chunk: (T, 256)
     >>> eng.reset([7])                         # recycle slot 7 mid-flight
-    >>> eng.detach([3]); eng.attach([3])       # slot 3: new tenant
+    >>> eng.detach([3]); eng.attach([3], m=2.5)  # slot 3: new tenant
 
     Chunks may have any length T >= 1; state is carried exactly across
     calls (bit-for-bit on the Q path).  With `mesh=`, processing fans
@@ -47,17 +52,22 @@ class StreamEngine:
                  mesh=None, axis_name: str = "data",
                  auto_attach: bool = True):
         self.capacity = int(capacity)
+        self.default_m = float(m)
         self.backend = get_backend(backend, m=m, fmt=fmt, block_t=block_t,
                                    interpret=interpret, lane_pad=lane_pad)
         self.state = engine_init(self.capacity, self.backend.state_dtype,
                                  active=auto_attach)
+        # per-slot outlier sensitivity, eq (6) m — float even on the Q
+        # path (the backend quantizes m^2+1 itself)
+        self._m = np.full((self.capacity,), self.default_m, np.float32)
 
-        def core(x, k, mean, var, active):
+        def core(x, k, mean, var, active, m):
             st, outs = engine_process(
                 EngineState(k=k, mean=mean, var=var, active=active), x,
-                self.backend)
+                self.backend, m=m)
             return (st.k, st.mean, st.var), (outs["ecc"], outs["outlier"])
 
+        self._mesh = mesh
         if mesh is not None:
             from repro.sharding.rules import make_channel_fanout
             n_shards = dict(mesh.shape)[axis_name]
@@ -69,37 +79,99 @@ class StreamEngine:
         self._fn = jax.jit(core)
 
     # ------------------------------------------------------ slot admin
-    def attach(self, slots=None, n: Optional[int] = None):
+    def attach(self, slots=None, n: Optional[int] = None, *,
+               m: Optional[float] = None):
         """Activate slots for new streams; returns the slot indices.
 
         With `slots=None`, grabs the first `n` free slots (all free
-        slots when `n` is also None).
+        slots when `n` is also None).  Attaching an occupied slot, or
+        asking for slots on a full engine, raises with the current
+        occupancy — JAX scatter silently drops out-of-range updates, so
+        without the check a bad attach would look like a success while
+        clobbering (or skipping) a live tenant.  `m` sets the new
+        tenants' outlier sensitivity (default: the engine's `m`).
         """
+        occupied = np.asarray(self.state.active)
+        n_act, cap = int(occupied.sum()), self.capacity
         if slots is None:
-            free = np.flatnonzero(~np.asarray(self.state.active))
-            slots = free if n is None else free[:n]
-            if n is not None and len(slots) < n:
-                raise ValueError(f"wanted {n} free slots, have {len(free)}")
-        idx = np.atleast_1d(np.asarray(slots))
+            free = np.flatnonzero(~occupied)
+            if n is None and not len(free):
+                raise ValueError(
+                    f"no free slots: engine full ({n_act}/{cap} active)")
+            if n is not None and len(free) < n:
+                raise ValueError(
+                    f"wanted {n} free slots, have {len(free)} "
+                    f"({n_act}/{cap} active)")
+            idx = free if n is None else free[:n]
+        else:
+            idx = np.atleast_1d(np.asarray(slots))
+            busy = np.unique(idx[occupied[idx]]) if idx.size else idx
+            if busy.size:
+                raise ValueError(
+                    f"slots {busy.tolist()} already attached "
+                    f"({n_act}/{cap} active); detach or reset them first")
         self.state = engine_attach(self.state, idx)
+        self._m[idx] = self.default_m if m is None else float(m)
         return idx
 
     def detach(self, slots):
         self.state = engine_detach(self.state, slots)
+        # recycled slots revert to the default sensitivity
+        self._m[np.asarray(slot_mask(slots, self.capacity))] = \
+            self.default_m
 
     def reset(self, slots=None):
         self.state = engine_reset(self.state, slots)
 
+    def set_m(self, slots, m) -> None:
+        """Retune the outlier sensitivity of the selected slots.
+
+        With integer `slots`, a vector `m` is matched positionally
+        (`set_m([3, 1], [2.0, 5.0])` sets slot 3 to 2.0 and slot 1 to
+        5.0); `slots` may also be None (all) or a bool mask.
+        """
+        m = np.asarray(m, np.float32)
+        if slots is None:
+            self._m[:] = m
+            return
+        slots = np.asarray(slots)
+        if slots.dtype == bool:
+            self._m[slots.reshape(self.capacity)] = m
+            return
+        idx = np.atleast_1d(slots).astype(int)
+        if idx.size and (idx.min() < 0 or idx.max() >= self.capacity):
+            raise IndexError(
+                f"slot indices {np.unique(idx).tolist()} out of range "
+                f"for capacity {self.capacity}")
+        self._m[idx] = m
+
     # ------------------------------------------------------ processing
-    def process(self, x: jnp.ndarray) -> dict:
-        """Feed one (T, capacity) chunk; returns per-sample verdicts."""
+    def process(self, x: jnp.ndarray, active=None) -> dict:
+        """Feed one (T, capacity) chunk; returns per-sample verdicts.
+
+        `active` optionally restricts this call to a subset of slots (a
+        bool mask or integer indices): everyone else is frozen — state
+        does not advance, no flags — but stays attached.  This is the
+        scheduler's suspend: slots whose request has no data this step
+        sit out the call without losing their stream position.
+        """
         x = jnp.asarray(x)
         if x.ndim != 2 or x.shape[1] != self.capacity:
             raise ValueError(
                 f"chunk must be (T, {self.capacity}), got {x.shape}")
         st = self.state
+        part = st.active if active is None else jnp.logical_and(
+            st.active, slot_mask(active, self.capacity))
+        # uniform sensitivity keeps the kernels' scalar fast path (the
+        # in-kernel verdict); only a genuinely mixed batch pays the
+        # vector-m eq (6) re-evaluation.  The fan-out path shards m as
+        # a (C,) vector, so it always takes the vector form.
+        mv = self._m
+        if self._mesh is None and (mv == mv[0]).all():
+            mv = mv[0]
         (k, mean, var), (ecc, outlier) = self._fn(
-            x, st.k, st.mean, st.var, st.active)
+            x, st.k, st.mean, st.var, part,
+            jnp.asarray(self.backend.quantize_m(mv)))
         self.state = EngineState(k=k, mean=mean, var=var, active=st.active)
         return {"ecc": ecc, "outlier": outlier}
 
@@ -112,6 +184,11 @@ class StreamEngine:
     def samples_seen(self) -> np.ndarray:
         """Per-slot sample counts (the honest per-channel k)."""
         return np.asarray(self.state.k)
+
+    @property
+    def slot_m(self) -> np.ndarray:
+        """Per-slot outlier sensitivity (eq (6) m), a (capacity,) copy."""
+        return self._m.copy()
 
     def teda_state(self) -> TedaState:
         """The packed state in the `repro.core` TedaState layout."""

@@ -1,0 +1,177 @@
+"""Autoscaling slot pool: bucketed capacities over `StreamEngine`.
+
+Growing or shrinking tenancy must not recompile every shape: a JAX
+program is specialized on the (T, C) chunk shape, so an engine whose
+capacity tracked occupancy exactly would pay a fresh compile on every
+attach/detach.  `SlotPool` quantizes capacity to a fixed bucket ladder
+(e.g. 8/16/32/64): acquiring a slot beyond the current bucket re-pads
+the packed state up to the next bucket, releasing the last tenants of a
+bucket re-pads it down — and every bucket's engine (with its compiled
+chunk programs) is cached, so a tenancy level seen before costs zero
+compiles.  Slot indices are stable across resizes (state is padded at
+the tail, never compacted), which is what lets a scheduler treat a slot
+as a request lifecycle (`launch/batching.py`).
+
+`PoolFull` (capacity exhausted at the top bucket) is the backpressure
+signal — explicit, with occupancy attached, never a silent drop.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.engine import StreamEngine
+from repro.engine.state import EngineState
+
+__all__ = ["SlotPool", "PoolFull"]
+
+
+class PoolFull(RuntimeError):
+    """All buckets are full: acquisition must wait for a release."""
+
+    def __init__(self, msg: str, occupancy: int, capacity: int):
+        super().__init__(msg)
+        self.occupancy = occupancy
+        self.capacity = capacity
+
+
+class SlotPool:
+    """Bucketed autoscaling pool of TEDA engine slots.
+
+    >>> pool = SlotPool("pallas", buckets=(8, 16, 32, 64))
+    >>> a, b = pool.acquire(2, m=2.5)       # capacity snaps to 8
+    >>> out = pool.process(chunk)           # chunk: (T, pool.capacity)
+    >>> pool.release([a])                   # may shrink back a bucket
+
+    All engine options (`fmt`, `block_t`, `interpret`, ...) pass
+    through to the per-bucket `StreamEngine`s.
+    """
+
+    def __init__(self, backend: str = "scan", *,
+                 buckets: Tuple[int, ...] = (8, 16, 32, 64),
+                 m: float = 3.0, **engine_opts):
+        if not buckets or any(b <= 0 for b in buckets):
+            raise ValueError(f"buckets must be positive: {buckets}")
+        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+        self.backend_name = backend
+        self.default_m = float(m)
+        self._opts = dict(engine_opts, m=m)
+        self._engines: dict[int, StreamEngine] = {}
+        self._bucket = self.buckets[0]
+        self.resizes = 0  # grow+shrink count (telemetry)
+
+    # ------------------------------------------------------- engines
+    def _engine_for(self, bucket: int) -> StreamEngine:
+        eng = self._engines.get(bucket)
+        if eng is None:
+            eng = StreamEngine(bucket, self.backend_name,
+                               auto_attach=False, **self._opts)
+            self._engines[bucket] = eng
+        return eng
+
+    @property
+    def engine(self) -> StreamEngine:
+        """The live engine at the current bucket capacity."""
+        return self._engine_for(self._bucket)
+
+    @property
+    def capacity(self) -> int:
+        return self._bucket
+
+    @property
+    def max_capacity(self) -> int:
+        return self.buckets[-1]
+
+    @property
+    def occupancy(self) -> int:
+        return len(self.engine.active_slots)
+
+    @property
+    def free_slots(self) -> np.ndarray:
+        act = np.asarray(self.engine.state.active)
+        return np.flatnonzero(~act)
+
+    # ------------------------------------------------------- resizing
+    def _resize(self, bucket: int) -> None:
+        """Re-pad the packed state into `bucket`'s cached engine."""
+        if bucket == self._bucket:
+            return
+        src, dst = self.engine, self._engine_for(bucket)
+        st, keep = src.state, min(self._bucket, bucket)
+
+        def pad(v, fill):
+            v = np.asarray(v)[:keep]
+            out = np.full((bucket,), fill, v.dtype)
+            out[:keep] = v
+            return jnp.asarray(out)
+
+        dst.state = EngineState(k=pad(st.k, 0), mean=pad(st.mean, 0),
+                                var=pad(st.var, 0),
+                                active=pad(st.active, False))
+        new_m = np.full((bucket,), self.default_m, np.float32)
+        new_m[:keep] = src.slot_m[:keep]
+        dst.set_m(None, new_m)
+        # the old engine keeps only its compiled programs, not tenants
+        src.state = EngineState(
+            k=jnp.zeros_like(st.k), mean=jnp.zeros_like(st.mean),
+            var=jnp.zeros_like(st.var),
+            active=jnp.zeros_like(st.active))
+        self._bucket = bucket
+        self.resizes += 1
+
+    def _bucket_holding(self, n_slots: int, max_idx: int) -> Optional[int]:
+        """Smallest bucket with room for `n_slots` keeping index
+        `max_idx` addressable; None if even the top bucket is too small."""
+        for b in self.buckets:
+            if b >= n_slots and b > max_idx:
+                return b
+        return None
+
+    # ------------------------------------------------------- tenancy
+    def acquire(self, n: int = 1, *, m: Optional[float] = None
+                ) -> np.ndarray:
+        """Attach `n` new tenants, growing the bucket if needed.
+
+        Returns the acquired slot indices (stable across resizes).
+        Raises `PoolFull` when the top bucket cannot hold them — the
+        scheduler's backpressure signal.
+        """
+        act = np.asarray(self.engine.state.active)
+        need = int(act.sum()) + n
+        if need > self._bucket:
+            max_idx = int(np.flatnonzero(act).max()) if act.any() else -1
+            target = self._bucket_holding(need, max_idx)
+            if target is None:
+                raise PoolFull(
+                    f"pool full: want {n} more slots with "
+                    f"{int(act.sum())}/{self.max_capacity} active at the "
+                    f"top bucket", int(act.sum()), self.max_capacity)
+            self._resize(target)
+        return self.engine.attach(n=n, m=m)
+
+    def release(self, slots) -> None:
+        """Detach tenants; shrink to the smallest bucket that still
+        addresses every remaining active slot."""
+        self.engine.detach(slots)
+        act = np.asarray(self.engine.state.active)
+        max_idx = int(np.flatnonzero(act).max()) if act.any() else -1
+        target = self._bucket_holding(int(act.sum()), max_idx)
+        if target is not None and target < self._bucket:
+            self._resize(target)
+
+    # ------------------------------------------------------- processing
+    def process(self, x, active=None) -> dict:
+        """Feed one (T, capacity) chunk to the current bucket's engine.
+
+        `active` is the per-call participation mask (see
+        `StreamEngine.process`); chunk width must equal the *current*
+        `pool.capacity` — schedulers re-read it after acquire/release.
+        """
+        return self.engine.process(x, active=active)
+
+    def stats(self) -> dict:
+        return {"bucket": self._bucket, "buckets": list(self.buckets),
+                "occupancy": self.occupancy, "resizes": self.resizes,
+                "compiled_buckets": sorted(self._engines)}

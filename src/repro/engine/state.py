@@ -109,18 +109,20 @@ def engine_detach(state: EngineState, slots) -> EngineState:
     return state._replace(active=jnp.logical_and(state.active, ~m))
 
 
-def engine_process(state: EngineState, x: jnp.ndarray, backend
-                   ) -> Tuple[EngineState, dict]:
+def engine_process(state: EngineState, x: jnp.ndarray, backend,
+                   m=None) -> Tuple[EngineState, dict]:
     """Advance the packed state through one (T, C) chunk.
 
     `backend` follows the `engine.backends.Backend` contract (duck-typed
     so this module stays a leaf).  Inactive slots are frozen (their
-    state does not advance) and never flag.  Returns
-    (state', {"ecc": (T, C), "outlier": (T, C) bool}) — `ecc` is in the
-    backend's native domain (Q int32 for "pallas-q").
+    state does not advance) and never flag.  `m` optionally overrides
+    the backend's constructed threshold — a scalar or per-slot (C,)
+    vector (tenants at different sensitivity levels in one batch).
+    Returns (state', {"ecc": (T, C), "outlier": (T, C) bool}) — `ecc`
+    is in the backend's native domain (Q int32 for "pallas-q").
     """
     kf, mf, vf, ecc, outlier = backend.process(x, state.k, state.mean,
-                                               state.var)
+                                               state.var, m=m)
     act = state.active
     new = EngineState(
         k=jnp.where(act, kf.astype(state.k.dtype), state.k),

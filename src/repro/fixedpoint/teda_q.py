@@ -27,6 +27,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.teda import TedaOutput, TedaState
 from repro.fixedpoint.qformat import (QFormat, div_qi, div_qq, sat,
@@ -43,14 +44,26 @@ def msq1_const(fmt: QFormat, m):
 
     Saturates when m^2+1 exceeds the integer range of the format (e.g.
     m=3 needs 4 integer bits) — faithfully degrading detection, which is
-    exactly what the word-length sweep measures.  Python scalars are
-    quantized exactly on the host; traced arrays through the format's
-    (float32) quantizer, so m stays jit-compatible.
+    exactly what the word-length sweep measures.  Python scalars and
+    concrete (numpy) arrays are quantized exactly on the host in double
+    precision — per-slot m vectors produce the same msq1 bits as the
+    scalar path.  Integer input is taken as an already-quantized Q
+    constant (the engine's host-exact handoff, mirroring how the scan
+    drivers take int32 x as pre-quantized).  Only arrays traced under
+    jit fall back to the format's float32 quantizer.
     """
     if isinstance(m, (int, float)):
         return fmt.quantize_scalar(float(m) * float(m) + 1.0)
-    m = jnp.asarray(m, jnp.float32)
-    return fmt.quantize(m * m + 1.0)
+    if jnp.issubdtype(jnp.result_type(m), jnp.integer):
+        return jnp.asarray(m, _I32)
+    try:
+        mv = np.asarray(m, np.float64)  # concrete: exact host quantize
+    except Exception:  # traced under jit: float32 quantizer
+        m = jnp.asarray(m, jnp.float32)
+        return fmt.quantize(m * m + 1.0)
+    q = np.clip(np.round((mv * mv + 1.0) * fmt.scale), fmt.qmin,
+                fmt.qmax).astype(np.int32)
+    return int(q) if q.ndim == 0 else jnp.asarray(q)
 
 
 def teda_q_init(batch_shape: Tuple[int, ...] = (), n_features: int = 1

@@ -7,6 +7,14 @@ preserved end-to-end, never collapsed to a shared scalar — and
 `_pad_layout` owns the lane/sublane padding.  The kernels mask padded
 time rows internally against the true valid length, so the final state
 is *always* returned, for every T (no `final=None` path remains).
+
+`m` may be a scalar or a per-channel (C,) vector (multi-tenant slots
+run different sensitivity levels in one batch).  The kernels take a
+scalar threshold constant in SMEM, but only the OUTLIER comparison
+depends on it — state and eccentricity do not — so the vector case
+re-evaluates eq (6) outside the kernel from the kernel's own `ecc`,
+with the exact same arithmetic (`div_qi` on the Q path), keeping the
+per-slot verdicts bit-consistent with a scalar-`m` run of that slot.
 """
 from __future__ import annotations
 
@@ -54,6 +62,11 @@ def state_vectors(state: Optional[TedaState], c: int, dtype
         return jnp.broadcast_to(v, (c,))
 
     return vec(state.k), vec(state.mean), vec(state.var)
+
+
+def _k_rows(k0, t_len, dtype):
+    """Global iteration index of every row: k0 + 1 .. k0 + T, (T, C)."""
+    return k0[None, :] + jnp.arange(1, t_len + 1, dtype=dtype)[:, None]
 
 
 def _pad_layout(x, rows, block_t, lane_pad):
@@ -116,16 +129,24 @@ def teda_scan_verdict(x: jnp.ndarray, m: float | jnp.ndarray = 3.0,
     to 5B (ecc + i8 flag) — the memory-roofline optimization recorded in
     EXPERIMENTS.md §Perf.  The kernel masks padded time rows against the
     valid length, so a bit-exact final state is returned for every T —
-    this is the engine's float hot path.
+    this is the engine's float hot path.  `m` may be per-channel (C,);
+    eq (6) is then re-evaluated outside the kernel (see module docs).
     """
     if interpret is None:
         interpret = default_interpret()
     x = jnp.asarray(x)
     t_len, c = x.shape
     k0, mean0, var0 = state_vectors(state, c, jnp.float32)
+    m_arr = jnp.asarray(m, jnp.float32)
+    per_slot = m_arr.ndim > 0
     ecc, outlier, fsum, fvar = _padded_call(
-        x, m, k0, mean0 * k0, var0, block_t=block_t,
-        interpret=interpret, lane_pad=lane_pad, verdict_only=True)
+        x, jnp.float32(0.0) if per_slot else m_arr, k0, mean0 * k0, var0,
+        block_t=block_t, interpret=interpret, lane_pad=lane_pad,
+        verdict_only=True)
+    if per_slot:
+        k_all = _k_rows(k0, t_len, jnp.float32)
+        thr = (m_arr[None, :] * m_arr[None, :] + 1.0) / (2.0 * k_all)
+        outlier = jnp.logical_and(ecc * 0.5 > thr, k_all >= 2.0)
     kf = k0 + t_len
     final = TedaState(k=kf, mean=(fsum / kf)[:, None], var=fvar)
     return final, {"ecc": ecc, "outlier": outlier.astype(bool)}
@@ -140,22 +161,27 @@ def teda_scan_tpu(x: jnp.ndarray, m: float | jnp.ndarray = 3.0,
     Returns (final TedaState with k (C,) / mean (C, 1) / var (C,),
     outputs dict of (T, C) arrays: mean, var, ecc, zeta, threshold,
     outlier).  Per-channel state (including k) carries exactly across
-    calls for arbitrary chunk lengths.
+    calls for arbitrary chunk lengths.  `m` may be per-channel (C,);
+    eq (6) is then re-evaluated outside the kernel (see module docs).
     """
     if interpret is None:
         interpret = default_interpret()
     x = jnp.asarray(x)
     t_len, c = x.shape
     k0, mean0, var0 = state_vectors(state, c, jnp.float32)
+    m_arr = jnp.asarray(m, jnp.float32)
+    per_slot = m_arr.ndim > 0
 
     mean, var, ecc, outlier, fsum, fvar = _padded_call(
-        x, m, k0, mean0 * k0, var0, block_t=block_t,
-        interpret=interpret, lane_pad=lane_pad, verdict_only=False)
+        x, jnp.float32(0.0) if per_slot else m_arr, k0, mean0 * k0, var0,
+        block_t=block_t, interpret=interpret, lane_pad=lane_pad,
+        verdict_only=False)
 
-    k_all = k0[None, :] + jnp.arange(1, t_len + 1,
-                                     dtype=jnp.float32)[:, None]
+    k_all = _k_rows(k0, t_len, jnp.float32)
     zeta = ecc * 0.5
-    thr = (jnp.asarray(m, jnp.float32) ** 2 + 1.0) / (2.0 * k_all)
+    thr = (m_arr ** 2 + 1.0) / (2.0 * k_all)
+    if per_slot:
+        outlier = jnp.logical_and(zeta > thr, k_all >= 2.0)
     kf = k0 + t_len
     final = TedaState(k=kf, mean=(fsum / kf)[:, None], var=fvar)
     outs = {"mean": mean, "var": var, "ecc": ecc, "zeta": zeta,
@@ -177,7 +203,9 @@ def teda_q_scan_tpu(x: jnp.ndarray, fmt: QFormat,
     state is exact — and always returned — for every T.  Returns
     (TedaState with k (C,) int32, Q int32 mean (C, 1) / var (C,),
     outputs dict of (T, C) arrays: mean, var, ecc, zeta, threshold — all
-    Q int32 — and bool outlier).
+    Q int32 — and bool outlier).  `m` may be per-channel (C,); eq (6) is
+    then re-evaluated outside the kernel with the same `div_qi`
+    arithmetic, so per-slot verdicts stay bit-exact (see module docs).
     """
     fmt.validate()
     if interpret is None:
@@ -189,16 +217,18 @@ def teda_q_scan_tpu(x: jnp.ndarray, fmt: QFormat,
     t_len, c = xq.shape
     k0, mean0, var0 = state_vectors(state, c, jnp.int32)
     msq1 = msq1_const(fmt, m)
+    per_slot = jnp.asarray(msq1).ndim > 0
 
     mean, var, ecc, outlier, fmean, fvar = _padded_q_call(
-        xq, msq1, k0, mean0, var0, fmt=fmt, block_t=block_t,
-        interpret=interpret, lane_pad=lane_pad)
+        xq, jnp.int32(0) if per_slot else msq1, k0, mean0, var0, fmt=fmt,
+        block_t=block_t, interpret=interpret, lane_pad=lane_pad)
 
-    k_all = k0[None, :] + jnp.arange(1, t_len + 1,
-                                     dtype=jnp.int32)[:, None]
+    k_all = _k_rows(k0, t_len, jnp.int32)
     zeta = ecc >> 1
     thr = div_qi(fmt, jnp.broadcast_to(jnp.asarray(msq1, jnp.int32),
                                        k_all.shape), 2 * k_all)
+    if per_slot:
+        outlier = jnp.logical_and(zeta > thr, k_all >= 2)
     final = TedaState(k=k0 + t_len, mean=fmean[:, None], var=fvar)
     outs = {"mean": mean, "var": var, "ecc": ecc, "zeta": zeta,
             "threshold": thr, "outlier": outlier.astype(bool)}

@@ -1,0 +1,328 @@
+"""Continuous-batching request scheduler: an engine slot *is* the
+request lifecycle.
+
+The paper's FPGA keeps detection at line rate because the pipeline
+never drains between streams; the software analogue is continuous
+batching: requests attach to a `SlotPool` slot on arrival, replay
+their history through the engine in fixed-size chunks (chunked
+prefill — long histories never trigger a fresh compile because the
+chunk shape is constant), interleave with the decode-phase trickle of
+live samples every tick, and detach/recycle the slot on completion.
+
+Two compiled programs per capacity bucket serve every tenant mix:
+
+  * the bulk program, (chunk_t, C) — any slot with >= chunk_t pending
+    samples (prefill replay, or a bursty live feed) rides it;
+  * the trickle program, (1, C) — slots with 1..chunk_t-1 pending
+    samples advance one sample per tick (decode phase, prefill tails).
+
+Slots with nothing pending are *suspended* for the call (the engine's
+per-call participation mask): frozen state, no flags, no detach.  The
+two calls per tick cover disjoint slot sets, so interleaved execution
+is bit-exact with running each request alone — chunk-invariance of the
+backends (tests/test_engine.py) plus slot independence, verified
+end-to-end by tests/test_batching.py on the Q path.
+
+Admission is a bounded queue: `submit` returns False when the queue is
+full (caller backpressure), and requests wait in the queue while every
+bucket of the pool is occupied (`PoolFull` backpressure inside the
+scheduler).  Per-request telemetry (queue wait, chunk latencies, flag
+counts) is kept for the serving benchmark and the gateway in
+`launch/serve.py`.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.engine import PoolFull, SlotPool
+
+__all__ = ["Request", "RequestStats", "BatchingScheduler"]
+
+QUEUED, PREFILL, DECODE, DONE = "queued", "prefill", "decode", "done"
+
+
+@dataclass
+class Request:
+    """One tenant stream: a history to replay + live samples to come.
+
+    `m` is this tenant's outlier sensitivity (None: scheduler default).
+    `closed` requests complete once their pending samples drain; open
+    requests keep their slot and wait for `feed`.
+    """
+
+    rid: str
+    history: np.ndarray = field(
+        default_factory=lambda: np.zeros((0,), np.float32))
+    m: Optional[float] = None
+    closed: bool = False
+
+
+@dataclass
+class RequestStats:
+    """Per-request telemetry, filled in as the lifecycle advances."""
+
+    rid: str
+    submitted_tick: int
+    admitted_tick: Optional[int] = None
+    done_tick: Optional[int] = None
+    slot: Optional[int] = None
+    samples: int = 0
+    flags: int = 0
+    prefill_chunks: int = 0
+    decode_steps: int = 0
+    chunk_latency_s: List[float] = field(default_factory=list)
+
+    @property
+    def queue_wait_ticks(self) -> Optional[int]:
+        if self.admitted_tick is None:
+            return None
+        return self.admitted_tick - self.submitted_tick
+
+
+class _Run:
+    """Internal per-request runtime record (admitted requests only)."""
+
+    __slots__ = ("req", "slot", "pending", "cursor", "phase", "stats",
+                 "ecc_parts", "outlier_parts")
+
+    def __init__(self, req: Request, slot: int, stats: RequestStats):
+        self.req = req
+        self.slot = slot
+        self.pending = np.asarray(req.history, np.float32).reshape(-1)
+        self.cursor = 0
+        self.phase = PREFILL if self.avail else DECODE
+        self.stats = stats
+        self.ecc_parts: List[np.ndarray] = []
+        self.outlier_parts: List[np.ndarray] = []
+
+    @property
+    def avail(self) -> int:
+        return self.pending.shape[0] - self.cursor
+
+    def push(self, samples: np.ndarray) -> None:
+        samples = np.asarray(samples, np.float32).reshape(-1)
+        # drop the consumed prefix before growing, keeping push O(new)
+        if self.cursor:
+            self.pending = self.pending[self.cursor:]
+            self.cursor = 0
+        self.pending = np.concatenate([self.pending, samples])
+
+    def take(self, n: int) -> np.ndarray:
+        out = self.pending[self.cursor:self.cursor + n]
+        self.cursor += n
+        return out
+
+
+class BatchingScheduler:
+    """Continuous batching of TEDA detection requests over a SlotPool.
+
+    >>> sched = BatchingScheduler("pallas", chunk_t=64)
+    >>> sched.submit(Request("tenant-a", history, m=2.5))
+    >>> sched.feed("tenant-a", live_chunk); sched.step()
+    >>> sched.close("tenant-a"); sched.drain()
+    >>> sched.results("tenant-a")["outlier"]
+
+    One `step()` = admit what fits, one bulk call, one trickle call,
+    retire what finished.  All engine options pass through to the pool.
+    """
+
+    def __init__(self, backend: str = "scan", *,
+                 buckets: Tuple[int, ...] = (8, 16, 32, 64),
+                 chunk_t: int = 32, m: float = 3.0,
+                 queue_limit: int = 64, collect: bool = True,
+                 measure_latency: bool = False,
+                 keep_finished: int = 1024, **engine_opts):
+        if chunk_t < 2:
+            raise ValueError("chunk_t must be >= 2 (1 is the trickle)")
+        # trickle calls are (1, C): a small block keeps their padded
+        # time extent (and interpret-mode cost) proportionate
+        engine_opts.setdefault("block_t", 8)
+        self.pool = SlotPool(backend, buckets=buckets, m=m, **engine_opts)
+        self.chunk_t = int(chunk_t)
+        self.queue_limit = int(queue_limit)
+        self.collect = collect
+        self.measure_latency = measure_latency
+        # retention caps: a forever-running gateway must not accumulate
+        # per-request records without bound.  The oldest finished
+        # requests (results + telemetry; their rid becomes reusable)
+        # and engine-call log entries are evicted past these limits.
+        self.keep_finished = int(keep_finished)
+        self.queue: deque[Request] = deque()
+        self.runs: Dict[str, _Run] = {}     # admitted, not yet done
+        self._finished: Dict[str, _Run] = {}
+        self.stats_by_rid: Dict[str, RequestStats] = {}
+        self.tick_no = 0
+        self.rejected = 0
+        self.completed = 0
+        self.call_log: deque = deque(maxlen=4096)  # recent engine calls
+
+    # --------------------------------------------------------- intake
+    def submit(self, req: Request) -> bool:
+        """Queue a request for admission; False = queue full (caller
+        backpressure — retry later or shed load)."""
+        if req.rid in self.stats_by_rid:
+            raise ValueError(f"duplicate request id {req.rid!r}")
+        if len(self.queue) >= self.queue_limit:
+            self.rejected += 1
+            return False
+        self.stats_by_rid[req.rid] = RequestStats(
+            rid=req.rid, submitted_tick=self.tick_no)
+        self.queue.append(req)
+        return True
+
+    def feed(self, rid: str, samples) -> None:
+        """Append live (decode-phase) samples to a request's stream."""
+        run = self.runs.get(rid)
+        if run is not None:
+            if run.req.closed:
+                raise ValueError(f"request {rid!r} is closed")
+            run.push(samples)
+            return
+        for req in self.queue:  # not yet admitted: samples are backlog
+            if req.rid == rid:
+                if req.closed:
+                    raise ValueError(f"request {rid!r} is closed")
+                req.history = np.concatenate(
+                    [np.asarray(req.history, np.float32).reshape(-1),
+                     np.asarray(samples, np.float32).reshape(-1)])
+                return
+        raise KeyError(f"unknown or finished request {rid!r}")
+
+    def close(self, rid: str) -> None:
+        """No more live samples: the request completes once drained."""
+        run = self.runs.get(rid)
+        if run is not None:
+            run.req.closed = True
+            return
+        for req in self.queue:
+            if req.rid == rid:
+                req.closed = True
+                return
+        raise KeyError(f"unknown or finished request {rid!r}")
+
+    # --------------------------------------------------------- the tick
+    def _admit(self, events: dict) -> None:
+        while self.queue:
+            req = self.queue[0]
+            try:
+                slot = int(self.pool.acquire(1, m=req.m)[0])
+            except PoolFull:
+                break  # pool backpressure: wait for a release
+            self.queue.popleft()
+            st = self.stats_by_rid[req.rid]
+            st.admitted_tick = self.tick_no
+            st.slot = slot
+            self.runs[req.rid] = _Run(req, slot, st)
+            events["admitted"].append(req.rid)
+
+    def _call(self, members: List[_Run], t_len: int, kind: str,
+              events: dict) -> None:
+        cap = self.pool.capacity
+        x = np.zeros((t_len, cap), np.float32)
+        mask = np.zeros((cap,), bool)
+        for run in members:
+            x[:, run.slot] = run.take(t_len)
+            mask[run.slot] = True
+        t0 = time.perf_counter()
+        out = self.pool.process(x, active=mask)
+        if self.measure_latency:
+            jax.block_until_ready(out["ecc"])
+        wall = time.perf_counter() - t0
+        self.call_log.append({"kind": kind, "t": t_len,
+                              "slots": len(members), "wall_s": wall})
+        outlier = np.asarray(out["outlier"])
+        ecc = np.asarray(out["ecc"]) if self.collect else None
+        for run in members:
+            st = run.stats
+            st.samples += t_len
+            if len(st.chunk_latency_s) < 4096:  # bounded per request
+                st.chunk_latency_s.append(wall)
+            col = outlier[:, run.slot]
+            nf = int(col.sum())
+            st.flags += nf
+            if nf:
+                events["flagged"].append(run.req.rid)
+            if kind == "bulk":
+                st.prefill_chunks += 1
+            else:
+                st.decode_steps += 1
+            if self.collect:
+                run.ecc_parts.append(ecc[:, run.slot].copy())
+                run.outlier_parts.append(col.copy())
+
+    def step(self) -> dict:
+        """One scheduler tick; returns {admitted, flagged, completed}."""
+        self.tick_no += 1
+        events: dict = {"admitted": [], "flagged": [], "completed": []}
+        self._admit(events)
+
+        bulk = [r for r in self.runs.values() if r.avail >= self.chunk_t]
+        if bulk:
+            self._call(bulk, self.chunk_t, "bulk", events)
+        trickle = [r for r in self.runs.values()
+                   if 1 <= r.avail < self.chunk_t]
+        if trickle:
+            self._call(trickle, 1, "trickle", events)
+
+        for rid in [rid for rid, r in self.runs.items()
+                    if r.req.closed and r.avail == 0]:
+            run = self.runs.pop(rid)
+            run.phase = DONE
+            run.stats.done_tick = self.tick_no
+            self.pool.release([run.slot])
+            self.completed += 1
+            events["completed"].append(rid)
+            self._finished[rid] = run
+            while len(self._finished) > self.keep_finished:
+                old = next(iter(self._finished))  # oldest completion
+                del self._finished[old]
+                self.stats_by_rid.pop(old, None)
+        return events
+
+    def drain(self, max_ticks: int = 100_000) -> int:
+        """Tick until every submitted request has completed; returns
+        the number of ticks it took."""
+        start = self.tick_no
+        while self.queue or self.runs:
+            if self.tick_no - start >= max_ticks:
+                raise RuntimeError(
+                    f"drain exceeded {max_ticks} ticks with "
+                    f"{len(self.queue)} queued / {len(self.runs)} running"
+                    " requests (open requests need close())")
+            self.step()
+        return self.tick_no - start
+
+    # --------------------------------------------------------- results
+    def results(self, rid: str) -> dict:
+        """Per-sample verdicts of a request, in stream order."""
+        run = self.runs.get(rid) or self._finished.get(rid)
+        if run is None:
+            raise KeyError(f"unknown request {rid!r}")
+        if not self.collect:
+            raise RuntimeError("scheduler built with collect=False")
+        cat = (lambda parts, dt: np.concatenate(parts)
+               if parts else np.zeros((0,), dt))
+        return {"ecc": cat(run.ecc_parts, np.float32),
+                "outlier": cat(run.outlier_parts, bool)}
+
+    def telemetry(self, rid: str) -> RequestStats:
+        return self.stats_by_rid[rid]
+
+    def stats(self) -> dict:
+        """Aggregate scheduler telemetry (the serving-bench payload)."""
+        walls = [c["wall_s"] for c in self.call_log]
+        lat = {}
+        if walls:
+            lat = {"calls": len(walls),
+                   "p50_ms": float(np.percentile(walls, 50) * 1e3),
+                   "p95_ms": float(np.percentile(walls, 95) * 1e3)}
+        return {"ticks": self.tick_no, "completed": self.completed,
+                "running": len(self.runs), "queued": len(self.queue),
+                "rejected_submits": self.rejected,
+                "chunk_latency": lat, "pool": self.pool.stats()}

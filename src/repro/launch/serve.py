@@ -1,68 +1,198 @@
-"""Batched serving driver with TEDA decode-stream monitoring.
+"""Serving gateway: continuous-batching TEDA detection + LM monitoring.
 
-Serves a (reduced or full) LM: prefills a prompt batch, then decodes with
-the KV-cache path while a multichannel TEDA engine watches per-request
-telemetry (logit entropy, max-logit) — flagged requests are surfaced the
-way a production gateway would quarantine degenerate generations
-(repetition collapse, NaN logits, prompt-injection-style OOD inputs).
+Two entry points, both driven by the `launch/batching.py` scheduler
+(admission queue, chunked prefill, per-request telemetry, backpressure
+when every capacity bucket is full):
 
-The telemetry (log-softmax entropy, max-logit), the packed TEDA monitor
-update (`repro.engine.engine_step`, one slot per request x channel), the
-flag accumulation and the next-token selection all run *inside* the
-jitted decode step: the Python loop only threads device arrays, so a
-generated token costs one dispatch and no host round-trip.
+  * `serve_streams` — the generic detection gateway: tenant streams
+    (history + live samples, per-tenant sensitivity `m`) arrive on a
+    schedule, attach to engine slots, and are served continuously.
+    This is the workload driver behind `benchmarks/bench_serving.py`.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b \
-        --scale tiny --batch 4 --prompt-len 32 --gen 32
+        PYTHONPATH=src python -m repro.launch.serve --mode streams \
+            --requests 16 --history 256 --live 32 --backend pallas
+
+  * `serve` — the LM demo: prefills a prompt batch, then decodes while
+    per-request telemetry (logit entropy, max-logit) streams through
+    the detection gateway — prompt-phase telemetry replays as chunked
+    prefill (the monitor is warmed up on the tenant's own history), and
+    decode-phase telemetry rides the per-tick trickle.  Flagged
+    requests surface the way a production gateway would quarantine
+    degenerate generations.
+
+        PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b \
+            --scale tiny --batch 4 --prompt-len 32 --gen 32
+
+The telemetry itself (log-softmax entropy, max-logit) is computed
+*inside* the jitted decode step — the Python loop threads device
+arrays and hands the host-side scheduler one small (B, 2) array per
+generated token.
 """
 from __future__ import annotations
 
 import argparse
 import functools
 import time
+from collections import deque
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config
-from repro.engine import engine_init, engine_step
+from repro.launch.batching import BatchingScheduler, Request
 from repro.models import init_cache, init_lm_params, lm_decode_step
 
 N_CHANNELS = 2  # per-request telemetry: (entropy, max-logit)
 
 
-def make_decode_step(cfg, m: float, greedy: bool):
-    """Build the fused decode+monitor step (one compiled program).
+# --------------------------------------------------------------- gateway
+def serve_streams(streams: Sequence[Tuple[str, np.ndarray, np.ndarray,
+                                          Optional[float]]],
+                  *, backend: str = "scan",
+                  buckets: Tuple[int, ...] = (8, 16, 32, 64),
+                  chunk_t: int = 32, m: float = 3.0, fmt=None,
+                  interpret: Optional[bool] = None,
+                  queue_limit: int = 64,
+                  arrivals_per_tick: Optional[int] = None,
+                  feed_per_tick: int = 1, collect: bool = False,
+                  measure_latency: bool = True,
+                  max_ticks: int = 1_000_000, **engine_opts) -> dict:
+    """Serve tenant streams through the continuous-batching scheduler.
 
-    Carries (tokens, caches, engine state, per-request flags) on device;
-    returns the sampled token plus the advanced monitor state.
+    `streams` is a sequence of (rid, history, live, m) — history
+    replays as chunked prefill on admission, live samples are fed
+    `feed_per_tick` per tick (the decode trickle), `m` is the tenant's
+    sensitivity (None: the gateway default).  `arrivals_per_tick`
+    models offered load (None: everything offered up front); arrivals
+    the admission queue rejects are re-offered next tick, counted in
+    `rejected_submits` — the backpressure measure.
+
+    Returns sustained rates, latency percentiles, queue-wait stats and
+    per-request telemetry.
+    """
+    class _Rec:
+        __slots__ = ("req", "live", "fed", "closed")
+
+        def __init__(self, rid, history, live, m_req):
+            self.req = Request(rid, np.asarray(history, np.float32))
+            self.req.m = m_req
+            self.live = np.asarray(live, np.float32).reshape(-1)
+            self.fed = 0
+            self.closed = False
+
+    recs = {s[0]: _Rec(*s) for s in streams}
+    if len(recs) != len(streams):
+        raise ValueError("duplicate request ids in streams")
+    # retention must cover the whole run: every request's telemetry is
+    # read back after the drain, so none may be evicted mid-run
+    engine_opts["keep_finished"] = max(
+        engine_opts.get("keep_finished", 1024), len(recs))
+    sched = BatchingScheduler(
+        backend, buckets=buckets, chunk_t=chunk_t, m=m, fmt=fmt,
+        interpret=interpret, queue_limit=queue_limit, collect=collect,
+        measure_latency=measure_latency, **engine_opts)
+    waiting = deque(recs.values())
+    total_samples = sum(len(r.req.history) + len(r.live)
+                        for r in recs.values())
+
+    t0 = time.perf_counter()
+    while sched.completed < len(recs):
+        if sched.tick_no >= max_ticks:
+            raise RuntimeError(f"serve_streams exceeded {max_ticks} ticks")
+        budget = len(waiting) if arrivals_per_tick is None \
+            else arrivals_per_tick
+        while waiting and budget > 0:
+            rec = waiting[0]
+            if not sched.submit(rec.req):
+                break  # queue full: re-offer this arrival next tick
+            waiting.popleft()
+            budget -= 1
+            if not len(rec.live):
+                sched.close(rec.req.rid)
+                rec.closed = True
+        for rec in recs.values():
+            if rec.closed or rec.req.rid not in sched.stats_by_rid:
+                continue
+            take = min(feed_per_tick, len(rec.live) - rec.fed)
+            if take:
+                sched.feed(rec.req.rid, rec.live[rec.fed:rec.fed + take])
+                rec.fed += take
+            if rec.fed == len(rec.live):
+                sched.close(rec.req.rid)
+                rec.closed = True
+        sched.step()
+    wall = time.perf_counter() - t0
+
+    agg = sched.stats()
+    waits = [sched.telemetry(rid).queue_wait_ticks for rid in recs]
+    per_request = {
+        rid: {"samples": st.samples, "flags": st.flags,
+              "queue_wait_ticks": st.queue_wait_ticks,
+              "prefill_chunks": st.prefill_chunks,
+              "decode_steps": st.decode_steps, "slot": st.slot}
+        for rid, st in ((rid, sched.telemetry(rid)) for rid in recs)}
+    return {
+        "backend": backend, "chunk_t": chunk_t,
+        "requests": len(recs), "samples": total_samples,
+        "wall_s": wall, "ticks": agg["ticks"],
+        "requests_per_s": len(recs) / wall,
+        "samples_per_s": total_samples / wall,
+        "rejected_submits": agg["rejected_submits"],
+        "chunk_latency": agg["chunk_latency"],
+        "queue_wait_ticks_p50": float(np.percentile(waits, 50)),
+        "queue_wait_ticks_p95": float(np.percentile(waits, 95)),
+        "flagged": sorted(rid for rid in recs
+                          if sched.telemetry(rid).flags),
+        "pool": agg["pool"],
+        "per_request": per_request,
+        "_scheduler": sched,  # for tests; stripped by the benchmark
+    }
+
+
+# --------------------------------------------------------------- LM demo
+def make_decode_step(cfg, greedy: bool):
+    """Build the jitted decode step with fused telemetry extraction.
+
+    Returns the sampled token plus the (B,) entropy / max-logit rows
+    the monitor gateway consumes — no extra host round-trip beyond the
+    one that feeds the scheduler.
     """
 
-    @functools.partial(jax.jit, donate_argnums=(3, 4, 5))
-    def step(params, tok, pos, caches, mon, flagged, key):
+    @functools.partial(jax.jit, donate_argnums=(3,))
+    def step(params, tok, pos, caches, key):
         logits, caches = lm_decode_step(params, tok, pos, caches, cfg)
-        # --- telemetry, fused with the decode step (no host hop) -----
-        logp = jax.nn.log_softmax(logits, axis=-1)
-        ent = -jnp.sum(jnp.exp(logp) * logp, axis=-1)        # (B,)
-        mx = jnp.max(logits, axis=-1)                        # (B,)
-        metrics = jnp.stack([ent, mx], -1).reshape(-1)       # (B*2,)
-        # --- packed TEDA monitor: one slot per request x channel -----
-        mon, verdict = engine_step(mon, metrics, m)
-        flagged = jnp.logical_or(
-            flagged, verdict.outlier.reshape(-1, N_CHANNELS).any(-1))
+        ent, mx = _telemetry(logits)
         if greedy:
             nxt = jnp.argmax(logits, axis=-1)
         else:
             nxt = jax.random.categorical(jax.random.fold_in(key, pos),
                                          logits)
-        return nxt, caches, mon, flagged
+        return nxt, caches, ent, mx
 
     return step
 
 
+@jax.jit
+def _telemetry(logits):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ent = -jnp.sum(jnp.exp(logp) * logp, axis=-1)  # (B,)
+    mx = jnp.max(logits, axis=-1)                  # (B,)
+    return ent, mx
+
+
+def _monitor_buckets(n_slots: int) -> Tuple[int, ...]:
+    """Bucket ladder reaching at least n_slots (powers of two from 8)."""
+    ladder = [8]
+    while ladder[-1] < n_slots:
+        ladder.append(ladder[-1] * 2)
+    return tuple(ladder)
+
+
 def serve(cfg, batch: int, prompt_len: int, gen: int, m: float = 3.5,
-          seed: int = 0, greedy: bool = True):
+          seed: int = 0, greedy: bool = True, backend: str = "scan",
+          chunk_t: int = 16, fmt=None):
     assert cfg.family != "encdec", "serve example targets decoder-only LMs"
     key = jax.random.PRNGKey(seed)
     params = init_lm_params(key, cfg)
@@ -73,55 +203,133 @@ def serve(cfg, batch: int, prompt_len: int, gen: int, m: float = 3.5,
     decode = jax.jit(
         lambda p, t, pos, c: lm_decode_step(p, t, pos, c, cfg),
         donate_argnums=(3,))
-    step = make_decode_step(cfg, m, greedy)
+    step = make_decode_step(cfg, greedy)
 
-    # prefill by teacher-forcing the prompt through the decode path
-    # (keeps one compiled program; a production server would lower a
-    # separate chunked-prefill program as in launch/specs.py)
+    # prefill by teacher-forcing the prompt through the decode path,
+    # banking per-token telemetry — it becomes the monitor's chunked-
+    # prefill history (the gateway warms up on the tenant's own prompt)
     t0 = time.perf_counter()
+    prompt_tel = []
     for i in range(prompt_len - 1):
-        _, caches = decode(params, prompts[:, i], jnp.int32(i), caches)
+        logits, caches = decode(params, prompts[:, i], jnp.int32(i), caches)
+        prompt_tel.append(_telemetry(logits))
     jax.block_until_ready(caches)
     prefill_s = time.perf_counter() - t0
+    # (prompt_len-1, B, 2) on host, one request x channel stream each
+    # (empty for prompt_len == 1: the monitor starts cold)
+    hist = (np.stack([np.stack([np.asarray(e), np.asarray(x)], -1)
+                      for e, x in prompt_tel])
+            if prompt_tel else np.zeros((0, batch, N_CHANNELS),
+                                        np.float32))
 
-    # TEDA monitor: (batch * 2) packed channels, advanced inside `step`
-    mon = engine_init(batch * N_CHANNELS)
-    flagged = jnp.zeros((batch,), bool)
+    # monitor gateway: one detection request per request x channel,
+    # admitted with the prompt history, fed one sample per decoded token
+    sched = BatchingScheduler(
+        backend, buckets=_monitor_buckets(batch * N_CHANNELS),
+        chunk_t=chunk_t, m=m, fmt=fmt,
+        queue_limit=batch * N_CHANNELS, collect=True)
+    rids = [(b, c) for b in range(batch) for c in range(N_CHANNELS)]
+
+    def rid(b, c):
+        return f"req{b}/ch{c}"
+
+    for b, c in rids:
+        ok = sched.submit(Request(rid(b, c), hist[:, b, c], m=m))
+        assert ok, "monitor queue sized to the request set"
+
     outs = []
     tok = prompts[:, -1]
     t0 = time.perf_counter()
     for i in range(gen):
         pos = jnp.int32(prompt_len - 1 + i)
-        tok, caches, mon, flagged = step(params, tok, pos, caches, mon,
-                                         flagged, key)
+        tok, caches, ent, mx = step(params, tok, pos, caches, key)
         outs.append(tok)
+        tel = np.stack([np.asarray(ent), np.asarray(mx)], -1)  # (B, 2)
+        for b, c in rids:
+            sched.feed(rid(b, c), tel[b, c:c + 1])
+        sched.step()
+    for b, c in rids:
+        sched.close(rid(b, c))
+    sched.drain()
     toks_out = np.stack([np.asarray(t) for t in outs], axis=1)
     decode_s = time.perf_counter() - t0
 
+    # flag on decode-phase verdicts only (any channel): the prompt is
+    # the tenant's own baseline, not the generation under scrutiny
+    flagged = [b for b in range(batch)
+               if any(sched.results(rid(b, c))["outlier"][-gen:].any()
+                      for c in range(N_CHANNELS))]
     return {
         "tokens": toks_out,
-        "flagged_requests": np.flatnonzero(np.asarray(flagged)).tolist(),
+        "flagged_requests": flagged,
         "prefill_tok_s": batch * (prompt_len - 1) / prefill_s,
         "decode_tok_s": batch * gen / decode_s,
+        "monitor": sched.stats(),
     }
+
+
+# ------------------------------------------------------------------- CLI
+def _demo_streams(n: int, history: int, live: int, seed: int = 0):
+    """Synthetic tenant mix: drifting means, one loud anomaly burst."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        h = rng.normal(loc=i * 0.1, size=(history,)).astype(np.float32)
+        lv = rng.normal(loc=i * 0.1, size=(live,)).astype(np.float32)
+        if live and i % 3 == 0:
+            lv[live // 2] += 15.0  # anomaly burst mid-stream
+        out.append((f"tenant-{i}", h, lv, 2.0 + (i % 3)))
+    return out
 
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="lm", choices=["lm", "streams"])
     ap.add_argument("--arch", default="qwen2-7b")
     ap.add_argument("--scale", default="tiny", choices=["tiny", "full"])
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--backend", default="scan")
+    ap.add_argument("--chunk-t", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--history", type=int, default=256)
+    ap.add_argument("--live", type=int, default=32)
+    ap.add_argument("--arrivals-per-tick", type=int, default=None)
     args = ap.parse_args()
+
+    fmt = None
+    if args.backend == "pallas-q":
+        from repro.fixedpoint import QFormat
+        fmt = QFormat(32, 20)  # the README's Q11.20 reference format
+
+    if args.mode == "streams":
+        res = serve_streams(
+            _demo_streams(args.requests, args.history, args.live),
+            backend=args.backend, chunk_t=args.chunk_t, fmt=fmt,
+            arrivals_per_tick=args.arrivals_per_tick)
+        lat = res["chunk_latency"]
+        print(f"[serve] {res['requests']} requests, "
+              f"{res['samples']} samples in {res['wall_s']:.2f}s "
+              f"({res['requests_per_s']:.1f} req/s, "
+              f"{res['samples_per_s']:.0f} samples/s)")
+        print(f"[serve] chunk latency p50 {lat.get('p50_ms', 0):.2f}ms "
+              f"p95 {lat.get('p95_ms', 0):.2f}ms, "
+              f"queue wait p95 {res['queue_wait_ticks_p95']:.0f} ticks, "
+              f"{res['rejected_submits']} backpressured submits")
+        print(f"[serve] flagged tenants: {res['flagged']}")
+        return
 
     cfg = get_config(args.arch)
     if args.scale == "tiny":
         cfg = cfg.reduced()
-    res = serve(cfg, args.batch, args.prompt_len, args.gen)
+    res = serve(cfg, args.batch, args.prompt_len, args.gen,
+                backend=args.backend, chunk_t=args.chunk_t, fmt=fmt)
     print(f"[serve] prefill {res['prefill_tok_s']:.1f} tok/s, "
           f"decode {res['decode_tok_s']:.1f} tok/s")
     print(f"[serve] TEDA-flagged requests: {res['flagged_requests']}")
+    print(f"[serve] monitor: {res['monitor']['ticks']} ticks, "
+          f"pool {res['monitor']['pool']}")
     print(f"[serve] sample continuation (req 0): "
           f"{res['tokens'][0][:16].tolist()}")
 

@@ -1,0 +1,235 @@
+"""Continuous-batching scheduler + autoscaling pool acceptance suite.
+
+Acceptance (ISSUE 3): interleaved prefill/decode across N concurrent
+requests through `BatchingScheduler` must be bit-exact (Q path) with
+each request run alone on a fresh engine; the `SlotPool` must grow and
+shrink through its bucket ladder without perturbing live tenants; a
+full pool and a full admission queue must be explicit backpressure,
+never silent drops.
+"""
+import numpy as np
+import pytest
+
+from conftest import given_or_cases
+
+from repro.engine import PoolFull, SlotPool, StreamEngine, list_backends
+from repro.fixedpoint import QFormat
+from repro.launch.batching import BatchingScheduler, Request
+
+FMT = QFormat(32, 20)
+
+
+def _mk_sched(backend, **kw):
+    kw.setdefault("buckets", (2, 4))
+    kw.setdefault("chunk_t", 8)
+    return BatchingScheduler(backend, fmt=FMT, **kw)
+
+
+def _workload(n, seed):
+    """n requests: ragged history/live lengths, a burst, mixed m."""
+    rng = np.random.default_rng(seed)
+    specs = {}
+    for i in range(n):
+        h = rng.normal(size=(int(rng.integers(0, 30)),)).astype(np.float32)
+        live = rng.normal(size=(int(rng.integers(0, 10)),)).astype(
+            np.float32)
+        if live.size and i % 3 == 0:
+            live[live.size // 2] += 25.0
+        specs[f"r{i}"] = (h, live, [1.5, 3.0, 6.0][i % 3])
+    return specs
+
+
+def _serve_interleaved(sched, specs, max_ticks=500):
+    """Staggered submits (one per tick), live fed one sample per tick."""
+    order = list(specs)
+    fed = {rid: 0 for rid in specs}
+    closed = set()
+    for tick in range(max_ticks):
+        if tick < len(order):
+            rid = order[tick]
+            h, live, m = specs[rid]
+            assert sched.submit(Request(rid, h, m=m))
+            if not live.size:
+                sched.close(rid)
+                closed.add(rid)
+        for rid, (h, live, m) in specs.items():
+            if rid not in sched.stats_by_rid or rid in closed:
+                continue
+            if fed[rid] < live.size:
+                sched.feed(rid, live[fed[rid]:fed[rid] + 1])
+                fed[rid] += 1
+            if fed[rid] == live.size:
+                sched.close(rid)
+                closed.add(rid)
+        sched.step()
+        if sched.completed == len(specs):
+            return
+    raise AssertionError(f"did not drain: {sched.stats()}")
+
+
+# ------------------------------------------- interleaved == isolated
+@pytest.mark.parametrize("backend", list_backends())
+@given_or_cases(
+    "n,seed", [(5, 0), (4, 1), (6, 2)],
+    lambda st: dict(n=st.integers(2, 6), seed=st.integers(0, 2 ** 16)),
+    max_examples=3)
+def test_interleaved_equals_isolated(backend, n, seed):
+    specs = _workload(n, seed)
+    sched = _mk_sched(backend, measure_latency=True)
+    _serve_interleaved(sched, specs)
+
+    for rid, (h, live, m) in specs.items():
+        full = np.concatenate([h, live])
+        res = sched.results(rid)
+        assert res["outlier"].shape[0] == full.size
+        if not full.size:
+            continue
+        # the oracle: this request alone on a fresh single-slot engine
+        oracle = StreamEngine(1, backend, fmt=FMT, block_t=8, m=m)
+        ref = oracle.process(full[:, None])
+        np.testing.assert_array_equal(
+            res["outlier"], np.asarray(ref["outlier"])[:, 0], err_msg=rid)
+        if backend == "pallas-q":  # quantized datapath: exact bits
+            np.testing.assert_array_equal(
+                res["ecc"], np.asarray(ref["ecc"])[:, 0], err_msg=rid)
+        else:
+            np.testing.assert_allclose(
+                res["ecc"], np.asarray(ref["ecc"])[:, 0],
+                rtol=1e-4, atol=1e-6, err_msg=rid)
+        st = sched.telemetry(rid)
+        assert st.samples == full.size
+        assert st.done_tick is not None
+
+
+def test_chunked_prefill_uses_bulk_program():
+    """A long history replays in fixed chunks, not one giant call."""
+    sched = _mk_sched("scan", chunk_t=8)
+    h = np.random.default_rng(0).normal(size=(30,)).astype(np.float32)
+    sched.submit(Request("a", h))
+    sched.close("a")
+    sched.drain()
+    st = sched.telemetry("a")
+    assert st.prefill_chunks == 3          # 30 = 3 x 8 + 6-sample tail
+    assert st.decode_steps == 6            # tail drains on the trickle
+    kinds = {c["kind"] for c in sched.call_log}
+    assert kinds == {"bulk", "trickle"}
+    assert all(c["t"] in (1, 8) for c in sched.call_log)
+
+
+def test_backpressure_queue_and_pool():
+    """Full admission queue rejects; full pool queues; both explicit."""
+    sched = _mk_sched("scan", buckets=(2,), queue_limit=2)
+    h = np.zeros((4,), np.float32)
+    for i in range(4):
+        ok = sched.submit(Request(f"r{i}", h))
+        assert ok == (i < 2)               # queue_limit=2: r2, r3 rejected
+    assert sched.rejected == 2
+    sched.step()                           # admits r0, r1 (bucket 2)
+    assert sched.submit(Request("r4", h))  # queue drained by admission
+    assert sched.submit(Request("r5", h))
+    sched.step()
+    assert len(sched.runs) == 2            # pool full: r4/r5 wait queued
+    assert len(sched.queue) == 2
+    for rid in ("r0", "r1", "r4", "r5"):
+        sched.close(rid)
+    sched.drain()
+    assert sched.completed == 4            # everyone served eventually
+
+
+def test_results_and_feed_lifecycle_errors():
+    sched = _mk_sched("scan")
+    with pytest.raises(KeyError):
+        sched.results("ghost")
+    with pytest.raises(KeyError):
+        sched.feed("ghost", [0.0])
+    sched.submit(Request("a", np.zeros((3,), np.float32)))
+    with pytest.raises(ValueError):
+        sched.submit(Request("a"))         # duplicate rid
+    sched.close("a")
+    with pytest.raises(ValueError):
+        sched.feed("a", [1.0])             # closed
+
+
+# --------------------------------------------------- autoscaling pool
+@pytest.mark.parametrize("backend", ["scan", "pallas-q"])
+def test_pool_grow_preserves_tenants(backend):
+    """Growing to the next bucket re-pads state without perturbing it."""
+    rng = np.random.default_rng(1)
+    xa = rng.normal(size=(20, 2)).astype(np.float32)
+    xb = rng.normal(size=(20, 4)).astype(np.float32)
+    xb[:, :2] = xa
+
+    pool = SlotPool(backend, buckets=(2, 4), fmt=FMT, block_t=8)
+    pool.acquire(2)
+    assert pool.capacity == 2
+    pool.process(xa)
+    pool.acquire(1)                        # 3 tenants: bucket 2 -> 4
+    assert pool.capacity == 4 and pool.resizes == 1
+    out = pool.process(xb, active=[0, 1])
+
+    flat = StreamEngine(2, backend, fmt=FMT, block_t=8)  # no-resize oracle
+    flat.process(xa)
+    ref = flat.process(xb[:, :2])
+    np.testing.assert_array_equal(np.asarray(out["outlier"])[:, :2],
+                                  np.asarray(ref["outlier"]))
+    if backend == "pallas-q":
+        np.testing.assert_array_equal(np.asarray(out["ecc"])[:, :2],
+                                      np.asarray(ref["ecc"]))
+    assert pool.engine.samples_seen[:3].tolist() == [40, 40, 0]
+
+
+def test_pool_shrinks_and_caches_buckets():
+    pool = SlotPool("scan", buckets=(2, 4, 8))
+    slots = pool.acquire(7)
+    assert pool.capacity == 8
+    pool.release(slots[2:])                # max live index is 1 -> bucket 2
+    assert pool.capacity == 2
+    assert pool.stats()["compiled_buckets"] == [2, 8]
+    pool.acquire(2)                        # back up a bucket
+    assert pool.capacity == 4 and pool.occupancy == 4
+    assert pool.stats()["compiled_buckets"] == [2, 4, 8]
+
+
+def test_pool_full_is_explicit():
+    pool = SlotPool("scan", buckets=(2, 4))
+    pool.acquire(4)
+    with pytest.raises(PoolFull) as ei:
+        pool.acquire(1)
+    assert ei.value.occupancy == 4 and ei.value.capacity == 4
+    assert "4/4" in str(ei.value)
+
+
+def test_finished_retention_is_bounded():
+    """A forever-running gateway evicts its oldest finished requests."""
+    sched = _mk_sched("scan", keep_finished=3)
+    for i in range(6):
+        sched.submit(Request(f"r{i}", np.zeros((2,), np.float32)))
+        sched.close(f"r{i}")
+    sched.drain()
+    assert sched.completed == 6
+    assert len(sched._finished) == 3
+    sched.results("r5")                    # recent results retained
+    with pytest.raises(KeyError):
+        sched.results("r0")                # oldest evicted
+    sched.submit(Request("r0"))            # ...and its rid is reusable
+    assert sched.telemetry("r5").done_tick is not None
+
+
+def test_serve_streams_outlives_retention_cap():
+    """Regression: serve_streams must read every request's telemetry
+    after the drain even when the stream count exceeds the scheduler's
+    default retention (it sizes keep_finished to the run)."""
+    from repro.launch.serve import serve_streams
+    streams = [(f"s{i}", np.zeros((3,), np.float32),
+                np.zeros((0,), np.float32), None) for i in range(12)]
+    res = serve_streams(streams, backend="scan", buckets=(2, 4),
+                        chunk_t=2, keep_finished=4)
+    assert res["requests"] == 12 and res["samples"] == 36
+    assert len(res["per_request"]) == 12
+
+
+def test_pool_per_tenant_m_survives_resize():
+    pool = SlotPool("scan", buckets=(2, 4), m=3.0)
+    pool.acquire(2, m=1.25)
+    pool.acquire(1, m=9.0)                 # grows to bucket 4
+    assert pool.engine.slot_m.tolist() == [1.25, 1.25, 9.0, 3.0]

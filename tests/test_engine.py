@@ -145,6 +145,107 @@ def test_attach_n_free_slots():
         eng.attach(n=3)  # only 2 free
 
 
+def test_attach_full_engine_raises_with_occupancy():
+    """Regression (ISSUE 3): attach on a full engine must raise with
+    the occupancy, not no-op via scatter's silent OOB-drop semantics."""
+    eng = StreamEngine(3, "scan", auto_attach=False)
+    eng.attach()  # grabs all free slots
+    with pytest.raises(ValueError, match=r"3/3"):
+        eng.attach()
+    with pytest.raises(ValueError, match=r"3/3"):
+        eng.attach(n=1)
+
+
+def test_attach_occupied_slot_raises():
+    """An explicit attach on a live tenant's slot must not clobber it."""
+    eng = StreamEngine(4, "scan", auto_attach=False)
+    eng.attach([1])
+    eng.process(_x(10, 4, seed=61))
+    with pytest.raises(ValueError, match=r"\[1\] already attached"):
+        eng.attach([1, 2])
+    assert eng.samples_seen[1] == 10  # tenant untouched by the failure
+    eng.detach([1])
+    eng.attach([1, 2])  # fine once freed
+
+
+@pytest.mark.parametrize("backend", list_backends())
+def test_per_slot_m_matches_scalar_engines(backend):
+    """A mixed-m batch equals per-m scalar engines column for column.
+
+    The m values are deliberately non-dyadic: the Q backend must
+    quantize the per-slot m^2+1 ROM constants on the host (exactly),
+    not through the float32 tracer."""
+    c = 4
+    x = _x(50, c, seed=71)
+    mixed = _mk(c, backend)
+    mixed.set_m([0, 1], 1.7)
+    mixed.set_m([2, 3], 6.3)
+    out = mixed.process(x)
+    lo = _mk(c, backend, m=1.7).process(x)
+    hi = _mk(c, backend, m=6.3).process(x)
+    got = np.asarray(out["outlier"])
+    np.testing.assert_array_equal(got[:, :2], np.asarray(lo["outlier"])[:, :2])
+    np.testing.assert_array_equal(got[:, 2:], np.asarray(hi["outlier"])[:, 2:])
+    # sensitivity ordering: the tighter threshold flags at least as often
+    assert got[:, :2].sum() >= got[:, 2:].sum()
+    if backend == "pallas-q":  # ecc is m-independent and stays bit-exact
+        np.testing.assert_array_equal(np.asarray(out["ecc"]),
+                                      np.asarray(lo["ecc"]))
+
+
+def test_msq1_vector_matches_scalar_for_awkward_m():
+    """Host quantization of per-slot m^2+1 is exact: a vector of any
+    (non-dyadic) m yields the same Q bits as the scalar ROM path."""
+    import numpy as np
+    from repro.fixedpoint.teda_q import msq1_const
+    for m in (2.3, 1.7, 3.0, 6.3):
+        scalar = msq1_const(FMT, m)
+        vec = np.asarray(msq1_const(FMT, np.full((5,), m, np.float64)))
+        assert vec.tolist() == [scalar] * 5, m
+    # integer input is taken as already-quantized
+    assert int(msq1_const(FMT, jnp.int32(12345))) == 12345
+
+
+def test_attach_sets_tenant_m_and_detach_restores_default():
+    eng = StreamEngine(3, "scan", m=3.0, auto_attach=False)
+    eng.attach([0], m=1.25)
+    assert eng.slot_m.tolist() == [1.25, 3.0, 3.0]
+    eng.detach([0])
+    assert eng.slot_m.tolist() == [3.0, 3.0, 3.0]
+
+
+def test_set_m_vector_is_positional():
+    """Regression: a vector m must follow the caller's slot order (a
+    mask-based assign silently re-sorted it), and bad slots raise."""
+    eng = StreamEngine(4, "scan", m=3.0)
+    eng.set_m([3, 1], [2.0, 5.0])
+    assert eng.slot_m.tolist() == [3.0, 5.0, 3.0, 2.0]
+    eng.set_m(None, 4.0)
+    assert eng.slot_m.tolist() == [4.0] * 4
+    eng.set_m(np.array([True, False, False, True]), 1.5)
+    assert eng.slot_m.tolist() == [1.5, 4.0, 4.0, 1.5]
+    with pytest.raises(IndexError):
+        eng.set_m([4], 2.0)
+
+
+@pytest.mark.parametrize("backend", list_backends())
+def test_per_call_active_mask_suspends_without_detach(backend):
+    """The scheduler's suspend: masked-out slots freeze but keep state."""
+    c = 4
+    xa, xb = _x(16, c, seed=81), _x(16, c, seed=82)
+    eng = _mk(c, backend)
+    eng.process(xa, active=[0, 1])
+    out = eng.process(xb, active=[1])
+    assert eng.samples_seen.tolist() == [16, 32, 0, 0]
+    assert not np.asarray(out["outlier"])[:, [0, 2, 3]].any()
+    # slot 1 advanced exactly like an unsuspended stream
+    cont = _mk(c, backend)
+    cont.process(xa)
+    ref = cont.process(xb)
+    np.testing.assert_array_equal(np.asarray(out["outlier"])[:, 1],
+                                  np.asarray(ref["outlier"])[:, 1])
+
+
 def test_per_channel_k_raggedness():
     """Slots attached at different times have honestly different k."""
     eng = StreamEngine(3, "pallas", block_t=32, auto_attach=False)
