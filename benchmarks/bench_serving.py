@@ -8,7 +8,18 @@ rate, and the gateway's sustained requests/s, samples/s, per-chunk
 latency percentiles, queue waits and backpressure events are recorded
 per backend.
 
-Emits a JSON table (one row per backend x offered load):
+Two load shapes per backend x offered load:
+
+  * "uniform" — every tenant has the same history/live split;
+  * "mixed"   — alternating prefill-heavy tenants (double-length
+    history with an odd remainder tail, no live feed) and decode-phase
+    tenants (near-empty history, double-length live feed).  This is
+    the shape the fused ragged (chunk_t, C) program exists for: both
+    kinds of slot retire their own sample count in one call
+    (ISSUE 4 — the old bulk/trickle split drained prefill tails
+    1 sample/tick).
+
+Emits a JSON table (one row per backend x offered load x shape):
 
     PYTHONPATH=src python benchmarks/bench_serving.py
     PYTHONPATH=src python benchmarks/bench_serving.py --smoke   # CI: tiny
@@ -25,16 +36,24 @@ from repro.fixedpoint import QFormat
 from repro.launch.serve import serve_streams
 
 
-def make_streams(n: int, history: int, live: int, seed: int = 0):
+def make_streams(n: int, history: int, live: int, seed: int = 0,
+                 shape: str = "uniform"):
     """Synthetic tenant mix: drifting means, per-tenant sensitivity,
-    an anomaly burst on every third stream."""
+    an anomaly burst on every third stream.  `shape="mixed"` alternates
+    prefill-heavy and decode-phase tenants (see module docs)."""
     rng = np.random.default_rng(seed)
     out = []
     for i in range(n):
-        h = rng.normal(loc=i * 0.1, size=(history,)).astype(np.float32)
-        lv = rng.normal(loc=i * 0.1, size=(live,)).astype(np.float32)
-        if live and i % 3 == 0:
-            lv[live // 2] += 15.0
+        if shape == "mixed" and i % 2 == 0:
+            h_i, l_i = 2 * history + 3, 0     # prefill-heavy, ragged tail
+        elif shape == "mixed":
+            h_i, l_i = 3, 2 * live            # decode-phase
+        else:
+            h_i, l_i = history, live
+        h = rng.normal(loc=i * 0.1, size=(h_i,)).astype(np.float32)
+        lv = rng.normal(loc=i * 0.1, size=(l_i,)).astype(np.float32)
+        if l_i and i % 3 == 0:
+            lv[l_i // 2] += 15.0
         out.append((f"tenant-{i}", h, lv, 2.0 + (i % 3)))
     return out
 
@@ -42,11 +61,11 @@ def make_streams(n: int, history: int, live: int, seed: int = 0):
 def bench_one(backend: str, offered_load: int, *, n_requests: int,
               history: int, live: int, chunk_t: int, buckets,
               queue_limit: int, fmt: QFormat, interpret,
-              reps: int = 2) -> dict:
+              shape: str = "uniform", reps: int = 2) -> dict:
     # each rep builds a fresh scheduler (compiles included); report the
     # best rep so the row reflects the machine, not one-off jitter
     runs = [serve_streams(
-        make_streams(n_requests, history, live),
+        make_streams(n_requests, history, live, shape=shape),
         backend=backend, buckets=buckets, chunk_t=chunk_t, fmt=fmt,
         interpret=interpret, queue_limit=queue_limit,
         arrivals_per_tick=offered_load, measure_latency=True)
@@ -56,6 +75,7 @@ def bench_one(backend: str, offered_load: int, *, n_requests: int,
     return {
         "backend": backend,
         "offered_load": offered_load,
+        "shape": shape,
         "requests": res["requests"],
         "samples": res["samples"],
         "wall_s": res["wall_s"],
@@ -72,16 +92,18 @@ def bench_one(backend: str, offered_load: int, *, n_requests: int,
 
 
 def run(backends, loads, *, n_requests, history, live, chunk_t, buckets,
-        queue_limit, wl=32, fl=20, interpret=None, reps=2):
+        queue_limit, wl=32, fl=20, interpret=None, reps=2,
+        shapes=("uniform", "mixed")):
     fmt = QFormat(wl, fl)
     rows = []
     for backend in backends:
         for load in loads:
-            rows.append(bench_one(
-                backend, load, n_requests=n_requests, history=history,
-                live=live, chunk_t=chunk_t, buckets=buckets,
-                queue_limit=queue_limit, fmt=fmt, interpret=interpret,
-                reps=reps))
+            for shape in shapes:
+                rows.append(bench_one(
+                    backend, load, n_requests=n_requests,
+                    history=history, live=live, chunk_t=chunk_t,
+                    buckets=buckets, queue_limit=queue_limit, fmt=fmt,
+                    interpret=interpret, shape=shape, reps=reps))
     return rows
 
 
@@ -93,6 +115,8 @@ def main(argv=None):
     ap.add_argument("--chunk-t", type=int, default=128)
     ap.add_argument("--loads", default="2,8,32",
                     help="comma-separated arrivals per tick")
+    ap.add_argument("--shapes", default="uniform,mixed",
+                    help="comma-separated load shapes (uniform, mixed)")
     ap.add_argument("--backends", default=",".join(list_backends()))
     ap.add_argument("--buckets", default="8,16,32,64")
     ap.add_argument("--queue-limit", type=int, default=16)
@@ -106,11 +130,12 @@ def main(argv=None):
     if args.smoke:
         n_requests, history, live, chunk_t = 6, 24, 6, 8
         loads, buckets, queue_limit = [2, 6], (4, 8), 4
-        interpret = True
+        shapes, interpret = ("uniform", "mixed"), True
     else:
         n_requests, history = args.requests, args.history
         live, chunk_t = args.live, args.chunk_t
         loads = [int(s) for s in args.loads.split(",")]
+        shapes = tuple(s for s in args.shapes.split(",") if s)
         buckets = tuple(int(s) for s in args.buckets.split(","))
         queue_limit = args.queue_limit
         interpret = None
@@ -119,7 +144,7 @@ def main(argv=None):
     rows = run(backends, loads, n_requests=n_requests, history=history,
                live=live, chunk_t=chunk_t, buckets=buckets,
                queue_limit=queue_limit, wl=args.wl, fl=args.fl,
-               interpret=interpret)
+               interpret=interpret, shapes=shapes)
     doc = {"bench": "serving_throughput", "smoke": bool(args.smoke),
            "rows": rows}
     text = json.dumps(doc, indent=2)

@@ -53,12 +53,20 @@ def linear_recurrence_scan(a: jnp.ndarray, b: jnp.ndarray, axis: int = 0
 
 def teda_scan(x: jnp.ndarray, m: float | jnp.ndarray = 3.0,
               state: Optional[TedaState] = None,
-              ) -> Tuple[TedaState, TedaOutput]:
+              valid_lens=None) -> Tuple[TedaState, TedaOutput]:
     """Parallel TEDA over x (T, ..., N): identical results to teda_stream.
 
     Steady-state identity with `core.teda.teda_stream` is exact in real
     arithmetic; in float32 the two differ only by reassociation rounding
     (tested to ~1e-5 rtol in tests/test_teda.py).
+
+    `valid_lens` (scalar or an array matching the batch shape of
+    `state.k`) restricts each stream to its leading vlen rows: the
+    counter plateaus there, invalid rows contribute nothing to the sum
+    and compose as identity variance maps, so the final state equals a
+    run of each stream's own prefix — the kernels' ragged contract
+    (`kernels/ops.py`) on the portability backend.  `None` keeps the
+    exact uniform computation (no masking applied).
     """
     T = x.shape[0]
     if state is None:
@@ -68,28 +76,48 @@ def teda_scan(x: jnp.ndarray, m: float | jnp.ndarray = 3.0,
     k0 = state.k  # (...,)
     # Global iteration index of each row: k0 + 1 .. k0 + T.
     t = jnp.arange(1, T + 1, dtype=x.dtype)
-    k = k0[None, ...] + t.reshape((T,) + (1,) * k0.ndim)  # (T, ...)
+    rows = t.reshape((T,) + (1,) * k0.ndim)
+    if valid_lens is None:
+        valid = None
+        k = k0[None, ...] + rows  # (T, ...)
+        kd = k  # always >= 1
+    else:
+        # clamp to [0, T] — same contract as the kernel wrappers
+        # (`kernels/ops.py::_vlen_vec`), so all backends agree on
+        # out-of-range input from traced callers
+        vlen = jnp.clip(jnp.asarray(valid_lens, x.dtype), 0.0, T)
+        valid = rows <= vlen[None]  # this row advances this stream
+        # the counter plateaus at each stream's own valid length
+        k = k0[None, ...] + jnp.minimum(rows, vlen[None])
+        kd = jnp.maximum(k, 1.0)  # k=0 (vlen=0 fresh stream) div guard
 
     # ---- eq (2): prefix sum --------------------------------------------
     s0 = state.mean * k0[..., None]  # carried running sum
-    s = s0[None] + jnp.cumsum(x, axis=0)  # (T, ..., N)
-    mean = s / k[..., None]
+    xs = x if valid is None else jnp.where(valid[..., None], x, 0.0)
+    s = s0[None] + jnp.cumsum(xs, axis=0)  # (T, ..., N)
+    mean = s / kd[..., None]
 
     # ---- eq (3): affine recurrence --------------------------------------
     d2 = jnp.sum((x - mean) ** 2, axis=-1)  # (T, ...)
-    a = (k - 1.0) / k
-    b = d2 / k
+    a = (k - 1.0) / kd
+    b = d2 / kd
+    if valid is not None:
+        # invalid rows are identity maps: the recurrence freezes there
+        a = jnp.where(valid, a, 1.0)
+        b = jnp.where(valid, b, 0.0)
+        d2 = jnp.where(valid, d2, 0.0)
     # Fold the carried variance into the first b: var_in enters through
     # y_1 = a_1 * var0 + b_1; associative_scan solves for y_0 = 0, so add
     # the a-prefix-product * var0 term analytically: prod_{i<=k} a_i =
-    # k0 / k (telescoping), valid for k0 >= 1; for k0 == 0 it is 0 except
+    # k0 / k (telescoping over the valid rows, so the plateaued k is the
+    # right denominator), valid for k0 >= 1; for k0 == 0 it is 0 except
     # the first-sample branch handled below.
     var = linear_recurrence_scan(a, b, axis=0) + state.var[None] * (
-        k0[None] / k)
+        k0[None] / kd)
 
     # ---- first-sample branch (Algorithm 1 lines 3..5) -------------------
     fresh = (k0 == 0.0)
-    first_row = k <= 1.0  # only possibly true at row 0 of fresh streams
+    first_row = k <= 1.0  # true while a fresh stream has absorbed <= 1 row
     # At k == 1: mu <- x_1 (cumsum already gives that), var <- 0, and the
     # distance term is zero by definition.
     var = jnp.where(first_row, 0.0, var)
@@ -98,10 +126,13 @@ def teda_scan(x: jnp.ndarray, m: float | jnp.ndarray = 3.0,
 
     # ---- eqs (1), (4), (5), (6) -----------------------------------------
     safe = var > 0.0
-    ecc = 1.0 / k + jnp.where(safe, d2 / (k * jnp.where(safe, var, 1.0)), 0.0)
+    ecc = 1.0 / kd + jnp.where(safe, d2 / (kd * jnp.where(safe, var, 1.0)),
+                               0.0)
     zeta = ecc / 2.0
     thr = teda_threshold(k, m)
     outlier = jnp.logical_and(zeta > thr, k >= 2.0)
+    if valid is not None:
+        outlier = jnp.logical_and(outlier, valid)
 
     out = TedaOutput(ecc=ecc, typ=1.0 - ecc, zeta=zeta, threshold=thr,
                      outlier=outlier, k=k)

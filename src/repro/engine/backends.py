@@ -43,22 +43,30 @@ _REGISTRY: Dict[str, Callable[..., "Backend"]] = {}
 class Backend:
     """Streaming detector contract.
 
-    `process(x, k, mean, var, m=None)` consumes one (T, C) chunk with
-    carried per-channel state vectors (C,) and returns
-    `(k', mean', var', ecc, outlier)` — the advanced state plus (T, C)
-    per-sample verdicts.  `m` overrides the constructed outlier
+    `process(x, k, mean, var, m=None, valid_lens=None)` consumes one
+    (T, C) chunk with carried per-channel state vectors (C,) and
+    returns `(k', mean', var', ecc, outlier)` — the advanced state plus
+    (T, C) per-sample verdicts.  `m` overrides the constructed outlier
     threshold per call: a scalar, or a per-channel (C,) vector so every
     slot runs its own sensitivity level (per-tenant thresholds in one
-    batch).  `state_dtype` is the dtype of the packed state (int32 for
-    the Q datapath, float32 otherwise); `ecc` is reported in the
-    backend's native domain (Q int32 for "pallas-q").
+    batch).  `valid_lens` (scalar or per-channel (C,) vector) restricts
+    each channel to its leading vlen rows: one ragged call retires a
+    different sample count per slot, each channel's state freezing
+    after its own prefix exactly as if it ran alone (bit-for-bit on the
+    Q path), and `outlier` is False at rows >= vlen[c]; `None` means
+    the whole chunk is valid for every channel (the uniform fast case).
+    `state_dtype` is the dtype of the packed state (int32 for the Q
+    datapath, float32 otherwise); `ecc` is reported in the backend's
+    native domain (Q int32 for "pallas-q") and is unspecified at ragged
+    tail rows.
     """
 
     name: str = "abstract"
     state_dtype = jnp.float32
 
     def process(self, x: jnp.ndarray, k: jnp.ndarray, mean: jnp.ndarray,
-                var: jnp.ndarray, m=None) -> Tuple[jnp.ndarray, ...]:
+                var: jnp.ndarray, m=None,
+                valid_lens=None) -> Tuple[jnp.ndarray, ...]:
         raise NotImplementedError
 
     def quantize_m(self, m):
@@ -114,9 +122,10 @@ class ScanBackend(Backend):
     def __init__(self, m: float = 3.0, **_ignored):
         self.m = m
 
-    def process(self, x, k, mean, var, m=None):
+    def process(self, x, k, mean, var, m=None, valid_lens=None):
         final, out = teda_scan(x[..., None], self._m(m),
-                               _as_teda_state(k, mean, var))
+                               _as_teda_state(k, mean, var),
+                               valid_lens=valid_lens)
         return final.k, final.mean[:, 0], final.var, out.ecc, out.outlier
 
 
@@ -135,11 +144,11 @@ class PallasBackend(Backend):
         self.interpret = interpret
         self.lane_pad = lane_pad
 
-    def process(self, x, k, mean, var, m=None):
+    def process(self, x, k, mean, var, m=None, valid_lens=None):
         final, out = teda_scan_verdict(
             x, self._m(m), _as_teda_state(k, mean, var),
-            block_t=self.block_t, interpret=self.interpret,
-            lane_pad=self.lane_pad)
+            valid_lens=valid_lens, block_t=self.block_t,
+            interpret=self.interpret, lane_pad=self.lane_pad)
         return (final.k, final.mean[:, 0], final.var, out["ecc"],
                 out["outlier"])
 
@@ -170,10 +179,10 @@ class PallasQBackend(Backend):
         return np.asarray(msq1_const(self.fmt, np.asarray(m, np.float64)),
                           np.int32)
 
-    def process(self, x, k, mean, var, m=None):
+    def process(self, x, k, mean, var, m=None, valid_lens=None):
         final, out = teda_q_scan_tpu(
             x, self.fmt, self._m(m), _as_teda_state(k, mean, var),
-            block_t=self.block_t, interpret=self.interpret,
-            lane_pad=self.lane_pad)
+            valid_lens=valid_lens, block_t=self.block_t,
+            interpret=self.interpret, lane_pad=self.lane_pad)
         return (final.k, final.mean[:, 0], final.var, out["ecc"],
                 out["outlier"])

@@ -8,9 +8,12 @@ slot has its own `k` and its own outlier threshold `m` (tenants run
 different sensitivity levels in one batch), an `active` mask gates
 state advancement, and `attach` / `detach` / `reset` recycle a slot for
 a new tenant mid-flight without touching neighbours.  `process` takes
-an optional per-call participation mask so a scheduler can freeze slots
-that have no data this step without releasing them (the
-continuous-batching suspend, `launch/batching.py`).
+optional per-call raggedness controls: `valid_lens` gives every slot
+its own retired-sample count for the call (0..T — one fused kernel
+program serves prefill-heavy and decode-phase slots together), and the
+`active` participation mask is the vlen=0 special case kept as sugar,
+so a scheduler can freeze slots that have no data this step without
+releasing them (the continuous-batching suspend, `launch/batching.py`).
 
 With a `mesh`, chunk processing fans out over the channel axis via
 `shard_map` (`sharding.rules.make_channel_fanout`) — channels are
@@ -61,10 +64,10 @@ class StreamEngine:
         # path (the backend quantizes m^2+1 itself)
         self._m = np.full((self.capacity,), self.default_m, np.float32)
 
-        def core(x, k, mean, var, active, m):
+        def core(x, k, mean, var, vlen, m):
             st, outs = engine_process(
-                EngineState(k=k, mean=mean, var=var, active=active), x,
-                self.backend, m=m)
+                EngineState(k=k, mean=mean, var=var, active=vlen > 0), x,
+                self.backend, m=m, valid_lens=vlen)
             return (st.k, st.mean, st.var), (outs["ecc"], outs["outlier"])
 
         self._mesh = mesh
@@ -146,22 +149,50 @@ class StreamEngine:
         self._m[idx] = m
 
     # ------------------------------------------------------ processing
-    def process(self, x: jnp.ndarray, active=None) -> dict:
+    def process(self, x: jnp.ndarray, active=None,
+                valid_lens=None) -> dict:
         """Feed one (T, capacity) chunk; returns per-sample verdicts.
 
-        `active` optionally restricts this call to a subset of slots (a
-        bool mask or integer indices): everyone else is frozen — state
-        does not advance, no flags — but stays attached.  This is the
-        scheduler's suspend: slots whose request has no data this step
-        sit out the call without losing their stream position.
+        `valid_lens` makes the call ragged: a scalar or per-slot
+        (capacity,) int vector, slot c retires exactly valid_lens[c]
+        leading rows of its column (0..T) in this one fused call — its
+        state freezes after its own prefix (bit-for-bit on the Q path)
+        and it never flags beyond it.  vlen=0 is the suspend: frozen,
+        no flags, still attached.
+
+        `active` optionally restricts the call to a subset of slots (a
+        bool mask or integer indices) — sugar for vlen=0 on everyone
+        else, composable with `valid_lens`.  Detached slots are always
+        held at vlen=0 regardless of either argument.
         """
         x = jnp.asarray(x)
         if x.ndim != 2 or x.shape[1] != self.capacity:
             raise ValueError(
                 f"chunk must be (T, {self.capacity}), got {x.shape}")
+        t_len = x.shape[0]
         st = self.state
         part = st.active if active is None else jnp.logical_and(
             st.active, slot_mask(active, self.capacity))
+        if valid_lens is None:
+            vl = jnp.full((self.capacity,), t_len, jnp.int32)
+        else:
+            vl = jnp.asarray(valid_lens, jnp.int32)
+            try:
+                vc = np.asarray(vl)  # concrete: host bounds check
+            except Exception:
+                vc = None  # traced under jit
+            if vc is not None and vc.size and (
+                    vc.min() < 0 or vc.max() > t_len):
+                raise ValueError(
+                    f"valid_lens must lie in [0, T={t_len}], got "
+                    f"[{vc.min()}, {vc.max()}]")
+            if vl.ndim == 0:
+                vl = jnp.broadcast_to(vl, (self.capacity,))
+            elif vl.shape != (self.capacity,):
+                raise ValueError(
+                    f"valid_lens must be scalar or ({self.capacity},), "
+                    f"got {vl.shape}")
+        vl = jnp.where(part, vl, 0)
         # uniform sensitivity keeps the kernels' scalar fast path (the
         # in-kernel verdict); only a genuinely mixed batch pays the
         # vector-m eq (6) re-evaluation.  The fan-out path shards m as
@@ -170,7 +201,7 @@ class StreamEngine:
         if self._mesh is None and (mv == mv[0]).all():
             mv = mv[0]
         (k, mean, var), (ecc, outlier) = self._fn(
-            x, st.k, st.mean, st.var, part,
+            x, st.k, st.mean, st.var, vl,
             jnp.asarray(self.backend.quantize_m(mv)))
         self.state = EngineState(k=k, mean=mean, var=var, active=st.active)
         return {"ecc": ecc, "outlier": outlier}

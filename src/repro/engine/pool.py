@@ -162,14 +162,18 @@ class SlotPool:
             self._resize(target)
 
     # ------------------------------------------------------- processing
-    def process(self, x, active=None) -> dict:
+    def process(self, x, active=None, valid_lens=None) -> dict:
         """Feed one (T, capacity) chunk to the current bucket's engine.
 
-        `active` is the per-call participation mask (see
-        `StreamEngine.process`); chunk width must equal the *current*
-        `pool.capacity` — schedulers re-read it after acquire/release.
+        `active` is the per-call participation mask and `valid_lens`
+        the per-slot ragged retire counts (see `StreamEngine.process`);
+        chunk width — and the `valid_lens` vector length — must equal
+        the *current* `pool.capacity`: schedulers re-read it after
+        acquire/release (`_resize` re-pads the packed *state* across
+        buckets, but per-call vectors are built fresh each tick).
         """
-        return self.engine.process(x, active=active)
+        return self.engine.process(x, active=active,
+                                   valid_lens=valid_lens)
 
     def stats(self) -> dict:
         return {"bucket": self._bucket, "buckets": list(self.buckets),

@@ -110,7 +110,7 @@ def engine_detach(state: EngineState, slots) -> EngineState:
 
 
 def engine_process(state: EngineState, x: jnp.ndarray, backend,
-                   m=None) -> Tuple[EngineState, dict]:
+                   m=None, valid_lens=None) -> Tuple[EngineState, dict]:
     """Advance the packed state through one (T, C) chunk.
 
     `backend` follows the `engine.backends.Backend` contract (duck-typed
@@ -118,19 +118,46 @@ def engine_process(state: EngineState, x: jnp.ndarray, backend,
     state does not advance) and never flag.  `m` optionally overrides
     the backend's constructed threshold — a scalar or per-slot (C,)
     vector (tenants at different sensitivity levels in one batch).
+
+    `valid_lens` (per-slot (C,) int vector) makes the call ragged: slot
+    c retires exactly valid_lens[c] leading rows (0..T) of its column —
+    the backend freezes each slot's state after its own prefix, slots
+    with vlen=0 are frozen bit-exactly at the packed state (no float
+    round-trip through the backend), and no slot flags at rows beyond
+    its valid length.  The caller owns folding occupancy/participation
+    into the vector (inactive slot => vlen 0).  `None` is the uniform
+    path: every active slot retires all T rows.
+
     Returns (state', {"ecc": (T, C), "outlier": (T, C) bool}) — `ecc`
     is in the backend's native domain (Q int32 for "pallas-q").
     """
-    kf, mf, vf, ecc, outlier = backend.process(x, state.k, state.mean,
-                                               state.var, m=m)
-    act = state.active
+    if valid_lens is None:
+        kf, mf, vf, ecc, outlier = backend.process(x, state.k, state.mean,
+                                                   state.var, m=m)
+        act = state.active
+        new = EngineState(
+            k=jnp.where(act, kf.astype(state.k.dtype), state.k),
+            mean=jnp.where(act, mf, state.mean),
+            var=jnp.where(act, vf, state.var),
+            active=act,
+        )
+        outs = {"ecc": ecc,
+                "outlier": jnp.logical_and(outlier, act[None, :])}
+        return new, outs
+
+    vl = jnp.asarray(valid_lens, jnp.int32)
+    kf, mf, vf, ecc, outlier = backend.process(
+        x, state.k, state.mean, state.var, m=m, valid_lens=vl)
+    adv = vl > 0  # fully-suspended slots: exact engine-level freeze
     new = EngineState(
-        k=jnp.where(act, kf.astype(state.k.dtype), state.k),
-        mean=jnp.where(act, mf, state.mean),
-        var=jnp.where(act, vf, state.var),
-        active=act,
+        k=jnp.where(adv, kf.astype(state.k.dtype), state.k),
+        mean=jnp.where(adv, mf, state.mean),
+        var=jnp.where(adv, vf, state.var),
+        active=state.active,
     )
-    outs = {"ecc": ecc, "outlier": jnp.logical_and(outlier, act[None, :])}
+    rows = jnp.arange(x.shape[0], dtype=vl.dtype)[:, None]
+    outs = {"ecc": ecc,
+            "outlier": jnp.logical_and(outlier, rows < vl[None, :])}
     return new, outs
 
 

@@ -15,6 +15,17 @@ depends on it — state and eccentricity do not — so the vector case
 re-evaluates eq (6) outside the kernel from the kernel's own `ecc`,
 with the exact same arithmetic (`div_qi` on the Q path), keeping the
 per-slot verdicts bit-consistent with a scalar-`m` run of that slot.
+
+`valid_lens` may likewise be a scalar or a per-channel (C,) vector:
+vlen[c] leading rows of channel c are valid (0..T), so one fused call
+can retire a *different* number of samples per slot — each channel's
+carried state freezes after its own vlen[c] rows, bit-exact on the Q
+path with a per-channel isolated run of that prefix.  `None` (the
+uniform fast case: the whole chunk is valid for every channel) skips
+the ragged verdict masking entirely and is bit-identical to a
+broadcast vlen=T vector — the kernels have a single vector code path.
+Per-sample outputs at rows >= vlen[c] are unspecified except `outlier`,
+which is guaranteed False there.
 """
 from __future__ import annotations
 
@@ -69,6 +80,31 @@ def _k_rows(k0, t_len, dtype):
     return k0[None, :] + jnp.arange(1, t_len + 1, dtype=dtype)[:, None]
 
 
+def _vlen_vec(valid_lens, t_len: int, c: int, dtype):
+    """Normalize `valid_lens` to a per-channel (C,) vector.
+
+    Returns (vlen, ragged): `ragged` is the *static* flag that the
+    caller asked for a valid-length restriction at all (None means the
+    whole chunk is valid for every channel — the uniform fast case that
+    skips the ragged verdict masking).  Values are clamped to [0, T]:
+    the kernels freeze each carry at the padded time extent, so an
+    unclamped vlen would make the returned k disagree with the state
+    the carries actually hold (and traced callers skip the engine's
+    host-side bounds check).
+    """
+    if valid_lens is None:
+        return jnp.full((c,), t_len, dtype), False
+    vl = jnp.clip(jnp.asarray(valid_lens, dtype), 0, t_len)
+    vl = vl.reshape(-1) if vl.ndim else vl
+    return jnp.broadcast_to(vl, (c,)), True
+
+
+def _mask_ragged_rows(outlier, vlen, t_len: int):
+    """No verdicts beyond a channel's valid length (eq (6) gate)."""
+    rows = jnp.arange(t_len, dtype=vlen.dtype)[:, None]
+    return jnp.logical_and(outlier, rows < vlen[None, :])
+
+
 def _pad_layout(x, rows, block_t, lane_pad):
     """Shared kernel-layout padding: time to block_t, lanes to lane_pad.
 
@@ -89,13 +125,14 @@ def _pad_layout(x, rows, block_t, lane_pad):
 @functools.partial(jax.jit,
                    static_argnames=("block_t", "interpret", "lane_pad",
                                     "verdict_only"))
-def _padded_call(x, m, k0, sum0, var0, *, block_t, interpret, lane_pad,
-                 verdict_only):
+def _padded_call(x, m, vlen, k0, sum0, var0, *, block_t, interpret,
+                 lane_pad, verdict_only):
+    # lane-padded channels get vlen=0 from the zero pad: frozen at state 0
     t_len, c = x.shape
-    xp, (kp, sp, vp), sl = _pad_layout(x, (k0, sum0, var0), block_t,
-                                       lane_pad)
-    scal = jnp.stack([jnp.asarray(m, jnp.float32), jnp.float32(t_len)])
-    outs = teda_pallas_call(xp, scal, kp, sp, vp, block_t=block_t,
+    xp, (vlp, kp, sp, vp), sl = _pad_layout(x, (vlen, k0, sum0, var0),
+                                            block_t, lane_pad)
+    scal = jnp.asarray(m, jnp.float32).reshape(1)
+    outs = teda_pallas_call(xp, scal, vlp, kp, sp, vp, block_t=block_t,
                             interpret=interpret, verdict_only=verdict_only)
     rows, (fsum, fvar) = outs[:-2], outs[-2:]
     return tuple(r[sl] for r in rows) + (fsum[0, :c], fvar[0, :c])
@@ -104,15 +141,15 @@ def _padded_call(x, m, k0, sum0, var0, *, block_t, interpret, lane_pad,
 @functools.partial(jax.jit,
                    static_argnames=("fmt", "block_t", "interpret",
                                     "lane_pad"))
-def _padded_q_call(xq, msq1, k0, mean0, var0, *, fmt, block_t, interpret,
-                   lane_pad):
-    # zero-padded channels stay at mean=var=0 (var>0 guard absorbs them)
+def _padded_q_call(xq, msq1, vlen, k0, mean0, var0, *, fmt, block_t,
+                   interpret, lane_pad):
+    # zero-padded channels stay at mean=var=0 (vlen=0: frozen carries)
     t_len, c = xq.shape
-    xp, (kp, mp, vp), sl = _pad_layout(xq, (k0, mean0, var0), block_t,
-                                       lane_pad)
-    scal = jnp.stack([jnp.asarray(msq1, jnp.int32), jnp.int32(t_len)])
+    xp, (vlp, kp, mp, vp), sl = _pad_layout(xq, (vlen, k0, mean0, var0),
+                                            block_t, lane_pad)
+    scal = jnp.asarray(msq1, jnp.int32).reshape(1)
     mean, var, ecc, outlier, fmean, fvar = teda_q_pallas_call(
-        xp, scal, kp, mp, vp, fmt=fmt, block_t=block_t,
+        xp, scal, vlp, kp, mp, vp, fmt=fmt, block_t=block_t,
         interpret=interpret)
     return (mean[sl], var[sl], ecc[sl], outlier[sl],
             fmean[0, :c], fvar[0, :c])
@@ -120,41 +157,48 @@ def _padded_q_call(xq, msq1, k0, mean0, var0, *, fmt, block_t, interpret,
 
 def teda_scan_verdict(x: jnp.ndarray, m: float | jnp.ndarray = 3.0,
                       state: Optional[TedaState] = None, *,
-                      block_t: int = 256,
+                      valid_lens=None, block_t: int = 256,
                       interpret: Optional[bool] = None,
                       lane_pad: int = 128):
     """Slim-output TEDA kernel: (final state, {ecc, outlier}).
 
     HBM write traffic per sample drops from 16B (mean+var+ecc+i32 flag)
     to 5B (ecc + i8 flag) — the memory-roofline optimization recorded in
-    EXPERIMENTS.md §Perf.  The kernel masks padded time rows against the
-    valid length, so a bit-exact final state is returned for every T —
-    this is the engine's float hot path.  `m` may be per-channel (C,);
-    eq (6) is then re-evaluated outside the kernel (see module docs).
+    EXPERIMENTS.md §Perf.  The kernel masks each channel's ragged tail
+    against its valid length, so a bit-exact final state is returned
+    for every T — this is the engine's float hot path.  `m` may be
+    per-channel (C,); eq (6) is then re-evaluated outside the kernel
+    (see module docs).  `valid_lens` may be a scalar or per-channel
+    (C,) vector of leading valid row counts (see module docs).
     """
     if interpret is None:
         interpret = default_interpret()
     x = jnp.asarray(x)
     t_len, c = x.shape
     k0, mean0, var0 = state_vectors(state, c, jnp.float32)
+    vlen, ragged = _vlen_vec(valid_lens, t_len, c, jnp.float32)
     m_arr = jnp.asarray(m, jnp.float32)
     per_slot = m_arr.ndim > 0
     ecc, outlier, fsum, fvar = _padded_call(
-        x, jnp.float32(0.0) if per_slot else m_arr, k0, mean0 * k0, var0,
-        block_t=block_t, interpret=interpret, lane_pad=lane_pad,
+        x, jnp.float32(0.0) if per_slot else m_arr, vlen, k0, mean0 * k0,
+        var0, block_t=block_t, interpret=interpret, lane_pad=lane_pad,
         verdict_only=True)
     if per_slot:
         k_all = _k_rows(k0, t_len, jnp.float32)
         thr = (m_arr[None, :] * m_arr[None, :] + 1.0) / (2.0 * k_all)
         outlier = jnp.logical_and(ecc * 0.5 > thr, k_all >= 2.0)
-    kf = k0 + t_len
-    final = TedaState(k=kf, mean=(fsum / kf)[:, None], var=fvar)
+    if ragged:
+        outlier = _mask_ragged_rows(outlier, vlen, t_len)
+    kf = k0 + vlen
+    final = TedaState(k=kf, mean=(fsum / jnp.maximum(kf, 1.0))[:, None],
+                      var=fvar)
     return final, {"ecc": ecc, "outlier": outlier.astype(bool)}
 
 
 def teda_scan_tpu(x: jnp.ndarray, m: float | jnp.ndarray = 3.0,
                   state: Optional[TedaState] = None, *,
-                  block_t: int = 256, interpret: Optional[bool] = None,
+                  valid_lens=None, block_t: int = 256,
+                  interpret: Optional[bool] = None,
                   lane_pad: int = 128) -> Tuple[TedaState, dict]:
     """TEDA over x (T, C) — C independent univariate streams.
 
@@ -163,18 +207,21 @@ def teda_scan_tpu(x: jnp.ndarray, m: float | jnp.ndarray = 3.0,
     outlier).  Per-channel state (including k) carries exactly across
     calls for arbitrary chunk lengths.  `m` may be per-channel (C,);
     eq (6) is then re-evaluated outside the kernel (see module docs).
+    `valid_lens` may be a scalar or per-channel (C,) vector of leading
+    valid row counts — one call retires vlen[c] samples per channel.
     """
     if interpret is None:
         interpret = default_interpret()
     x = jnp.asarray(x)
     t_len, c = x.shape
     k0, mean0, var0 = state_vectors(state, c, jnp.float32)
+    vlen, ragged = _vlen_vec(valid_lens, t_len, c, jnp.float32)
     m_arr = jnp.asarray(m, jnp.float32)
     per_slot = m_arr.ndim > 0
 
     mean, var, ecc, outlier, fsum, fvar = _padded_call(
-        x, jnp.float32(0.0) if per_slot else m_arr, k0, mean0 * k0, var0,
-        block_t=block_t, interpret=interpret, lane_pad=lane_pad,
+        x, jnp.float32(0.0) if per_slot else m_arr, vlen, k0, mean0 * k0,
+        var0, block_t=block_t, interpret=interpret, lane_pad=lane_pad,
         verdict_only=False)
 
     k_all = _k_rows(k0, t_len, jnp.float32)
@@ -182,8 +229,11 @@ def teda_scan_tpu(x: jnp.ndarray, m: float | jnp.ndarray = 3.0,
     thr = (m_arr ** 2 + 1.0) / (2.0 * k_all)
     if per_slot:
         outlier = jnp.logical_and(zeta > thr, k_all >= 2.0)
-    kf = k0 + t_len
-    final = TedaState(k=kf, mean=(fsum / kf)[:, None], var=fvar)
+    if ragged:
+        outlier = _mask_ragged_rows(outlier, vlen, t_len)
+    kf = k0 + vlen
+    final = TedaState(k=kf, mean=(fsum / jnp.maximum(kf, 1.0))[:, None],
+                      var=fvar)
     outs = {"mean": mean, "var": var, "ecc": ecc, "zeta": zeta,
             "threshold": thr, "outlier": outlier.astype(bool)}
     return final, outs
@@ -192,7 +242,8 @@ def teda_scan_tpu(x: jnp.ndarray, m: float | jnp.ndarray = 3.0,
 def teda_q_scan_tpu(x: jnp.ndarray, fmt: QFormat,
                     m: float | jnp.ndarray = 3.0,
                     state: Optional[TedaState] = None, *,
-                    block_t: int = 256, interpret: Optional[bool] = None,
+                    valid_lens=None, block_t: int = 256,
+                    interpret: Optional[bool] = None,
                     lane_pad: int = 128) -> Tuple[TedaState, dict]:
     """Bit-accurate Q-format TEDA kernel over x (T, C) channel streams.
 
@@ -206,6 +257,9 @@ def teda_q_scan_tpu(x: jnp.ndarray, fmt: QFormat,
     Q int32 — and bool outlier).  `m` may be per-channel (C,); eq (6) is
     then re-evaluated outside the kernel with the same `div_qi`
     arithmetic, so per-slot verdicts stay bit-exact (see module docs).
+    `valid_lens` may be a scalar or per-channel (C,) vector of leading
+    valid row counts — one fused call retires vlen[c] samples per
+    channel, bit-exact with per-channel isolated runs of each prefix.
     """
     fmt.validate()
     if interpret is None:
@@ -216,12 +270,13 @@ def teda_q_scan_tpu(x: jnp.ndarray, fmt: QFormat,
         xq = jnp.asarray(x, jnp.int32)
     t_len, c = xq.shape
     k0, mean0, var0 = state_vectors(state, c, jnp.int32)
+    vlen, ragged = _vlen_vec(valid_lens, t_len, c, jnp.int32)
     msq1 = msq1_const(fmt, m)
     per_slot = jnp.asarray(msq1).ndim > 0
 
     mean, var, ecc, outlier, fmean, fvar = _padded_q_call(
-        xq, jnp.int32(0) if per_slot else msq1, k0, mean0, var0, fmt=fmt,
-        block_t=block_t, interpret=interpret, lane_pad=lane_pad)
+        xq, jnp.int32(0) if per_slot else msq1, vlen, k0, mean0, var0,
+        fmt=fmt, block_t=block_t, interpret=interpret, lane_pad=lane_pad)
 
     k_all = _k_rows(k0, t_len, jnp.int32)
     zeta = ecc >> 1
@@ -229,7 +284,9 @@ def teda_q_scan_tpu(x: jnp.ndarray, fmt: QFormat,
                                        k_all.shape), 2 * k_all)
     if per_slot:
         outlier = jnp.logical_and(zeta > thr, k_all >= 2)
-    final = TedaState(k=k0 + t_len, mean=fmean[:, None], var=fvar)
+    if ragged:
+        outlier = _mask_ragged_rows(outlier, vlen, t_len)
+    final = TedaState(k=k0 + vlen, mean=fmean[:, None], var=fvar)
     outs = {"mean": mean, "var": var, "ecc": ecc, "zeta": zeta,
             "threshold": thr, "outlier": outlier.astype(bool)}
     return final, outs

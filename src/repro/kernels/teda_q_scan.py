@@ -15,11 +15,14 @@ bit-exact with the pure-JAX Q scan by construction.
 
 Layout contract (enforced by ops.py):
   x: (T, C) int32 Q-values, T % block_t == 0, C % 128 == 0,
-  block_t % 8 == 0.  SMEM scalars: [msq1_q, t_valid] int32.  The
-  per-channel counter offset `k0` is a (1, C) int32 carry row (slots may
-  sit at different stream positions).  Rows at global index >= t_valid
-  are masked: the mean/var carries freeze, so the final-state rows —
-  always emitted as (1, C) outputs — are exact for every t_valid.
+  block_t % 8 == 0.  SMEM scalar: [msq1_q] int32.  The per-channel
+  counter offset `k0` and the per-channel valid length `vlen` are
+  (1, C) int32 carry rows (slots may sit at different stream positions
+  and retire different sample counts in one call; a uniform chunk is a
+  broadcast vlen).  Rows of channel c at global index >= vlen[c] are
+  masked: that channel's mean/var carries freeze, so the final-state
+  rows — always emitted as (1, C) outputs — are exact for every ragged
+  vlen vector, bit-for-bit with a per-channel isolated run.
 """
 from __future__ import annotations
 
@@ -37,9 +40,9 @@ from repro.kernels.teda_scan import tpu_compiler_params
 __all__ = ["teda_q_scan_kernel", "teda_q_pallas_call"]
 
 
-def teda_q_scan_kernel(scal_ref, x_ref, init_k_ref, init_mean_ref,
-                       init_var_ref, mean_ref, var_ref, ecc_ref,
-                       outlier_ref, fmean_ref, fvar_ref,
+def teda_q_scan_kernel(scal_ref, x_ref, vlen_ref, init_k_ref,
+                       init_mean_ref, init_var_ref, mean_ref, var_ref,
+                       ecc_ref, outlier_ref, fmean_ref, fvar_ref,
                        mean_carry, var_carry, *, block_t: int,
                        fmt: QFormat):
     i = pl.program_id(0)
@@ -50,7 +53,7 @@ def teda_q_scan_kernel(scal_ref, x_ref, init_k_ref, init_mean_ref,
         var_carry[...] = init_var_ref[...]
 
     msq1 = scal_ref[0]
-    t_valid = scal_ref[1]
+    vlen = vlen_ref[...]  # (1, C) int32 per-channel valid length
     k0 = init_k_ref[...]  # (1, C) int32 per-channel counter offset
 
     # counter-only dividers for the whole chunk, vectorized over rows
@@ -63,7 +66,7 @@ def teda_q_scan_kernel(scal_ref, x_ref, init_k_ref, init_mean_ref,
         mean, var = carry  # (1, C) int32 Q
         g = i * block_t + r            # global row index
         k = k0 + g + 1                 # the FPGA's counter register, (1, C)
-        valid = g < t_valid
+        valid = g < vlen               # per-channel ragged mask, (1, C)
         xr = x_ref[pl.ds(r, 1), :]
         terms = tuple(jax.lax.dynamic_slice_in_dim(t, r, 1, 0)
                       for t in (rk_b, inv_b, thr_b))
@@ -73,7 +76,7 @@ def teda_q_scan_kernel(scal_ref, x_ref, init_k_ref, init_mean_ref,
         var_ref[pl.ds(r, 1), :] = var_n
         ecc_ref[pl.ds(r, 1), :] = ecc
         outlier_ref[pl.ds(r, 1), :] = outl.astype(jnp.int8)
-        # padded tail rows must not advance the carried state
+        # each channel's ragged tail must not advance its carried state
         return (jnp.where(valid, mean_n, mean),
                 jnp.where(valid, var_n, var))
 
@@ -86,14 +89,16 @@ def teda_q_scan_kernel(scal_ref, x_ref, init_k_ref, init_mean_ref,
 
 
 def teda_q_pallas_call(x: jnp.ndarray, scal: jnp.ndarray,
-                       init_k: jnp.ndarray, init_mean: jnp.ndarray,
-                       init_var: jnp.ndarray, *, fmt: QFormat,
-                       block_t: int, interpret: bool):
-    """Raw pallas_call. x (T, C) int32 pre-padded; scal = [msq1, t_valid];
-    init_k / init_mean / init_var are (1, C) int32 carry rows.
+                       vlen: jnp.ndarray, init_k: jnp.ndarray,
+                       init_mean: jnp.ndarray, init_var: jnp.ndarray, *,
+                       fmt: QFormat, block_t: int, interpret: bool):
+    """Raw pallas_call. x (T, C) int32 pre-padded; scal = [msq1] (1,);
+    vlen / init_k / init_mean / init_var are (1, C) int32 carry rows —
+    vlen[c] is the number of leading valid rows of channel c (0..T).
 
     Returns (mean, var, ecc, outlier, final_mean, final_var); the final
-    rows are always populated (state after t_valid valid rows).
+    rows are always populated (each channel's state after its own
+    vlen[c] valid rows).
     """
     t_len, c = x.shape
     assert t_len % block_t == 0 and block_t % 8 == 0 and c % 128 == 0, (
@@ -120,8 +125,9 @@ def teda_q_pallas_call(x: jnp.ndarray, scal: jnp.ndarray,
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),  # scal (2,) int32
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # scal (1,) int32
             row_spec,    # x
+            carry_spec,  # vlen
             carry_spec,  # init_k
             carry_spec,  # init_mean
             carry_spec,  # init_var
@@ -135,4 +141,4 @@ def teda_q_pallas_call(x: jnp.ndarray, scal: jnp.ndarray,
         ],
         compiler_params=compiler_params,
         interpret=interpret,
-    )(scal, x, init_k, init_mean, init_var)
+    )(scal, x, vlen, init_k, init_mean, init_var)

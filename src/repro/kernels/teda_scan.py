@@ -11,13 +11,15 @@ across the 128-lane channel axis, so every VPU "cycle" retires
 Layout contract (enforced by ops.py):
   x: (T, C) with T % block_t == 0, C % 128 == 0, block_t % 8 == 0.
 Carried state (running sum, running variance per channel) lives in VMEM
-scratch across grid steps.  `m` and the valid length `t_valid` arrive as
-SMEM scalars; the per-channel iteration offset `k0` arrives as a (1, C)
-carry row, so every channel may sit at a different stream position
-(multi-tenant slots).  Rows at global index >= t_valid are masked
-in-kernel (sum += 0; variance map = identity), so the final carries —
-always emitted as (1, C) outputs — hold the state after exactly t_valid
-valid samples regardless of time padding.
+scratch across grid steps.  `m` arrives as an SMEM scalar; the
+per-channel iteration offset `k0` and the per-channel valid length
+`vlen` arrive as (1, C) carry rows, so every channel may sit at a
+different stream position *and* retire a different number of samples in
+one call (ragged multi-tenant slots; a uniform chunk is just a
+broadcast vlen).  Rows of channel c at global index >= vlen[c] are
+masked in-kernel (sum += 0; variance map = identity), so the final
+carries — always emitted as (1, C) outputs — hold each channel's state
+after exactly vlen[c] valid samples regardless of time padding.
 """
 from __future__ import annotations
 
@@ -78,7 +80,7 @@ def _affine_scan_rows(a: jnp.ndarray, b: jnp.ndarray):
     return a, b
 
 
-def teda_scan_kernel(scal_ref, x_ref, init_k_ref, init_sum_ref,
+def teda_scan_kernel(scal_ref, x_ref, vlen_ref, init_k_ref, init_sum_ref,
                      init_var_ref, *out_refs, block_t: int,
                      verdict_only: bool = False):
     if verdict_only:
@@ -99,19 +101,20 @@ def teda_scan_kernel(scal_ref, x_ref, init_k_ref, init_sum_ref,
         var_carry[...] = init_var_ref[...].astype(jnp.float32)
 
     m = scal_ref[0]
-    t_valid = scal_ref[1]
 
     x = x_ref[...].astype(jnp.float32)  # (bt, C)
     bt, c = x.shape
     k0 = init_k_ref[...].astype(jnp.float32)  # (1, C) per-channel offset
+    vlen = vlen_ref[...].astype(jnp.float32)  # (1, C) per-channel length
     t = jax.lax.broadcasted_iota(jnp.float32, (bt, 1), 0)
     g = i * block_t + t               # global row index, (bt, 1)
-    valid = g < t_valid               # padded-tail mask, (bt, 1)
+    valid = g < vlen                  # ragged-tail mask, (bt, C)
     k = k0 + g + 1.0                  # per-channel iteration index, (bt, C)
 
     # ---- MEAN module: eq (2) as a prefix sum ---------------------------
-    # Invalid rows contribute nothing, so the running sum freezes at the
-    # last valid sample and the final carry is exact for every t_valid.
+    # Invalid rows contribute nothing, so each channel's running sum
+    # freezes at its last valid sample and the final carry is exact for
+    # every ragged vlen vector.
     s = _cumsum_rows(jnp.where(valid, x, 0.0)) + sum_carry[...]
     mean = s / k
 
@@ -147,16 +150,19 @@ def teda_scan_kernel(scal_ref, x_ref, init_k_ref, init_sum_ref,
     var_carry[...] = var[block_t - 1:block_t]
 
 
-def teda_pallas_call(x: jnp.ndarray, scal: jnp.ndarray,
+def teda_pallas_call(x: jnp.ndarray, scal: jnp.ndarray, vlen: jnp.ndarray,
                      init_k: jnp.ndarray, init_sum: jnp.ndarray,
                      init_var: jnp.ndarray, *, block_t: int,
                      interpret: bool, verdict_only: bool = False):
-    """Raw pallas_call. x (T, C) pre-padded; scal = [m, t_valid] f32 (2,);
-    init_k / init_sum / init_var are (1, C) per-channel carry rows.
+    """Raw pallas_call. x (T, C) pre-padded; scal = [m] f32 (1,);
+    vlen / init_k / init_sum / init_var are (1, C) per-channel carry
+    rows — vlen[c] is the number of leading rows of channel c that are
+    valid (0..T; a uniform chunk passes a broadcast T).
 
     Returns (mean, var, ecc, outlier, final_sum, final_var) or, with
     verdict_only, (ecc, outlier, final_sum, final_var).  The final
-    carries are always populated (state after t_valid valid rows).
+    carries are always populated (each channel's state after its own
+    vlen[c] valid rows).
     """
     t_len, c = x.shape
     assert t_len % block_t == 0 and block_t % 8 == 0 and c % 128 == 0, (
@@ -194,8 +200,9 @@ def teda_pallas_call(x: jnp.ndarray, scal: jnp.ndarray,
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),  # scal (2,)
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # scal (1,)
             row_spec,  # x
+            carry_spec,  # vlen
             carry_spec,  # init_k
             carry_spec,  # init_sum
             carry_spec,  # init_var
@@ -208,4 +215,4 @@ def teda_pallas_call(x: jnp.ndarray, scal: jnp.ndarray,
         ],
         compiler_params=compiler_params,
         interpret=interpret,
-    )(scal, x, init_k, init_sum, init_var)
+    )(scal, x, vlen, init_k, init_sum, init_var)

@@ -9,19 +9,22 @@ prefill — long histories never trigger a fresh compile because the
 chunk shape is constant), interleave with the decode-phase trickle of
 live samples every tick, and detach/recycle the slot on completion.
 
-Two compiled programs per capacity bucket serve every tenant mix:
+ONE compiled (chunk_t, C) program per capacity bucket serves every
+tenant mix: each tick makes a single fused engine call in which slot c
+retires `min(pending_c, chunk_t)` samples via the engine's per-slot
+`valid_lens` vector — a prefill-heavy slot rides the full chunk, a
+decode-phase slot retires its one live sample, and a slot with nothing
+pending is suspended at vlen=0 (frozen state, no flags, no detach) —
+all in the same call.  This kills both the old bulk/trickle program
+split (two dispatches per tick over disjoint slot sets) and the
+1-sample-per-tick prefill-tail drain: a history of H samples now
+retires in ceil(H / chunk_t) ticks instead of
+floor(H / chunk_t) + (H mod chunk_t).
 
-  * the bulk program, (chunk_t, C) — any slot with >= chunk_t pending
-    samples (prefill replay, or a bursty live feed) rides it;
-  * the trickle program, (1, C) — slots with 1..chunk_t-1 pending
-    samples advance one sample per tick (decode phase, prefill tails).
-
-Slots with nothing pending are *suspended* for the call (the engine's
-per-call participation mask): frozen state, no flags, no detach.  The
-two calls per tick cover disjoint slot sets, so interleaved execution
-is bit-exact with running each request alone — chunk-invariance of the
-backends (tests/test_engine.py) plus slot independence, verified
-end-to-end by tests/test_batching.py on the Q path.
+Ragged interleaved execution is bit-exact with running each request
+alone — per-slot valid-length masking inside the kernels
+(tests/test_ragged.py) plus slot independence, verified end-to-end by
+tests/test_batching.py on the Q path.
 
 Admission is a bounded queue: `submit` returns False when the queue is
 full (caller backpressure), and requests wait in the queue while every
@@ -128,8 +131,9 @@ class BatchingScheduler:
     >>> sched.close("tenant-a"); sched.drain()
     >>> sched.results("tenant-a")["outlier"]
 
-    One `step()` = admit what fits, one bulk call, one trickle call,
-    retire what finished.  All engine options pass through to the pool.
+    One `step()` = admit what fits, one fused ragged (chunk_t, C) call
+    retiring min(pending, chunk_t) samples per slot, retire what
+    finished.  All engine options pass through to the pool.
     """
 
     def __init__(self, backend: str = "scan", *,
@@ -137,11 +141,13 @@ class BatchingScheduler:
                  chunk_t: int = 32, m: float = 3.0,
                  queue_limit: int = 64, collect: bool = True,
                  measure_latency: bool = False,
-                 keep_finished: int = 1024, **engine_opts):
+                 keep_finished: int = 1024,
+                 call_log_len: int = 4096, **engine_opts):
         if chunk_t < 2:
-            raise ValueError("chunk_t must be >= 2 (1 is the trickle)")
-        # trickle calls are (1, C): a small block keeps their padded
-        # time extent (and interpret-mode cost) proportionate
+            raise ValueError("chunk_t must be >= 2")
+        # decode-only ticks retire 1 sample/slot of the (chunk_t, C)
+        # program: a small block keeps the padded time extent (and
+        # interpret-mode cost) proportionate
         engine_opts.setdefault("block_t", 8)
         self.pool = SlotPool(backend, buckets=buckets, m=m, **engine_opts)
         self.chunk_t = int(chunk_t)
@@ -160,7 +166,7 @@ class BatchingScheduler:
         self.tick_no = 0
         self.rejected = 0
         self.completed = 0
-        self.call_log: deque = deque(maxlen=4096)  # recent engine calls
+        self.call_log: deque = deque(maxlen=int(call_log_len))
 
     # --------------------------------------------------------- intake
     def submit(self, req: Request) -> bool:
@@ -221,39 +227,48 @@ class BatchingScheduler:
             self.runs[req.rid] = _Run(req, slot, st)
             events["admitted"].append(req.rid)
 
-    def _call(self, members: List[_Run], t_len: int, kind: str,
-              events: dict) -> None:
+    def _call(self, members: List[_Run], events: dict) -> None:
+        """One fused ragged (chunk_t, C) engine call: slot c retires
+        min(pending_c, chunk_t) samples via the per-slot valid-length
+        vector; everyone else is suspended at vlen=0."""
         cap = self.pool.capacity
+        t_len = self.chunk_t
         x = np.zeros((t_len, cap), np.float32)
-        mask = np.zeros((cap,), bool)
+        vlens = np.zeros((cap,), np.int32)
+        taken: Dict[str, int] = {}
         for run in members:
-            x[:, run.slot] = run.take(t_len)
-            mask[run.slot] = True
+            n = min(run.avail, t_len)
+            x[:n, run.slot] = run.take(n)
+            vlens[run.slot] = n
+            taken[run.req.rid] = n
         t0 = time.perf_counter()
-        out = self.pool.process(x, active=mask)
+        out = self.pool.process(x, valid_lens=vlens)
         if self.measure_latency:
             jax.block_until_ready(out["ecc"])
         wall = time.perf_counter() - t0
-        self.call_log.append({"kind": kind, "t": t_len,
-                              "slots": len(members), "wall_s": wall})
+        self.call_log.append({"kind": "fused", "t": t_len,
+                              "slots": len(members),
+                              "retired": int(vlens.sum()),
+                              "wall_s": wall})
         outlier = np.asarray(out["outlier"])
         ecc = np.asarray(out["ecc"]) if self.collect else None
         for run in members:
             st = run.stats
-            st.samples += t_len
+            n = taken[run.req.rid]
+            st.samples += n
             if len(st.chunk_latency_s) < 4096:  # bounded per request
                 st.chunk_latency_s.append(wall)
-            col = outlier[:, run.slot]
+            col = outlier[:n, run.slot]
             nf = int(col.sum())
             st.flags += nf
             if nf:
                 events["flagged"].append(run.req.rid)
-            if kind == "bulk":
-                st.prefill_chunks += 1
+            if n > 1:
+                st.prefill_chunks += 1  # a multi-sample (chunked) ride
             else:
-                st.decode_steps += 1
+                st.decode_steps += 1    # the 1-sample decode trickle
             if self.collect:
-                run.ecc_parts.append(ecc[:, run.slot].copy())
+                run.ecc_parts.append(ecc[:n, run.slot].copy())
                 run.outlier_parts.append(col.copy())
 
     def step(self) -> dict:
@@ -262,13 +277,9 @@ class BatchingScheduler:
         events: dict = {"admitted": [], "flagged": [], "completed": []}
         self._admit(events)
 
-        bulk = [r for r in self.runs.values() if r.avail >= self.chunk_t]
-        if bulk:
-            self._call(bulk, self.chunk_t, "bulk", events)
-        trickle = [r for r in self.runs.values()
-                   if 1 <= r.avail < self.chunk_t]
-        if trickle:
-            self._call(trickle, 1, "trickle", events)
+        ready = [r for r in self.runs.values() if r.avail > 0]
+        if ready:
+            self._call(ready, events)
 
         for rid in [rid for rid, r in self.runs.items()
                     if r.req.closed and r.avail == 0]:

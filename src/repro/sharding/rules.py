@@ -101,11 +101,12 @@ def shard_map_compat(f, mesh, in_specs, out_specs, check: bool = False):
 def make_channel_fanout(fn, mesh: Mesh, axis_name: str = "data"):
     """shard_map fan-out of an independent-channel stream processor.
 
-    `fn(x, k, mean, var, active, m) -> ((k', mean', var'),
+    `fn(x, k, mean, var, vlen, m) -> ((k', mean', var'),
     (ecc, outlier))` — the `repro.engine` backend contract: x is (T, C)
     with C independent univariate streams on the lane axis, the state
-    rows (and the per-slot threshold vector `m`) are (C,) vectors, and
-    the per-sample outputs are (T, C).  Channels are independent TEDA
+    rows (and the per-slot valid-length vector `vlen` and threshold
+    vector `m`) are (C,) vectors, and the per-sample outputs are
+    (T, C).  Channels are independent TEDA
     modules (the paper's replicated-module scaling, §5.2.1), so the
     fan-out needs no collectives: each device runs `fn` on its C/D
     channel slice.  The caller must keep C divisible by the axis size

@@ -1,11 +1,14 @@
 """Continuous-batching scheduler + autoscaling pool acceptance suite.
 
-Acceptance (ISSUE 3): interleaved prefill/decode across N concurrent
-requests through `BatchingScheduler` must be bit-exact (Q path) with
-each request run alone on a fresh engine; the `SlotPool` must grow and
-shrink through its bucket ladder without perturbing live tenants; a
-full pool and a full admission queue must be explicit backpressure,
-never silent drops.
+Acceptance (ISSUE 3 + ISSUE 4): interleaved prefill/decode across N
+concurrent requests through `BatchingScheduler` must be bit-exact (Q
+path) with each request run alone on a fresh engine; every tick is ONE
+fused ragged (chunk_t, C) call, so a prefill tail retires in
+ceil(history / chunk_t) ticks rather than draining 1/tick; the
+`SlotPool` must grow and shrink through its bucket ladder without
+perturbing live tenants; a full pool and a full admission queue must
+be explicit backpressure, never silent drops; and the scheduler's
+retention caps (`keep_finished`, `call_log_len`) must actually evict.
 """
 import numpy as np
 import pytest
@@ -101,19 +104,45 @@ def test_interleaved_equals_isolated(backend, n, seed):
         assert st.done_tick is not None
 
 
-def test_chunked_prefill_uses_bulk_program():
-    """A long history replays in fixed chunks, not one giant call."""
+def test_prefill_tail_retires_in_ceil_ticks():
+    """Regression (ISSUE 4): a 30-sample history on chunk_t=8 retires in
+    ceil(30/8) = 4 fused calls — the 6-sample tail rides the same
+    (chunk_t, C) program as the full chunks via its per-slot valid
+    length, instead of draining 1 sample/tick on a trickle program."""
     sched = _mk_sched("scan", chunk_t=8)
     h = np.random.default_rng(0).normal(size=(30,)).astype(np.float32)
     sched.submit(Request("a", h))
     sched.close("a")
-    sched.drain()
+    ticks = sched.drain()
+    assert ticks == 4                      # not 3 + 6 = 9 as before
     st = sched.telemetry("a")
-    assert st.prefill_chunks == 3          # 30 = 3 x 8 + 6-sample tail
-    assert st.decode_steps == 6            # tail drains on the trickle
-    kinds = {c["kind"] for c in sched.call_log}
-    assert kinds == {"bulk", "trickle"}
-    assert all(c["t"] in (1, 8) for c in sched.call_log)
+    assert st.samples == 30
+    assert st.prefill_chunks == 4          # 8 + 8 + 8 + 6
+    assert st.decode_steps == 0            # no 1-sample drain ticks
+    assert {c["kind"] for c in sched.call_log} == {"fused"}
+    assert all(c["t"] == 8 for c in sched.call_log)  # one program shape
+    assert [c["retired"] for c in sched.call_log] == [8, 8, 8, 6]
+
+
+def test_mixed_prefill_decode_slots_share_one_call():
+    """A prefill-heavy and a decode-phase request advance in the SAME
+    fused call, each retiring its own sample count."""
+    sched = _mk_sched("scan", chunk_t=8)
+    h = np.random.default_rng(1).normal(size=(20,)).astype(np.float32)
+    sched.submit(Request("big", h))        # prefill-heavy
+    sched.submit(Request("drip"))          # decode-phase, fed 1/tick
+    sched.close("big")
+    for i in range(3):
+        sched.feed("drip", [float(i)])
+        sched.step()
+    # each tick made exactly one fused call serving both slots
+    log = list(sched.call_log)
+    assert [c["kind"] for c in log] == ["fused"] * 3
+    assert [c["slots"] for c in log] == [2, 2, 2]
+    assert [c["retired"] for c in log] == [9, 9, 5]  # 8+1, 8+1, 4+1
+    big, drip = sched.telemetry("big"), sched.telemetry("drip")
+    assert big.samples == 20 and big.prefill_chunks == 3
+    assert drip.samples == 3 and drip.decode_steps == 3
 
 
 def test_backpressure_queue_and_pool():
@@ -213,6 +242,22 @@ def test_finished_retention_is_bounded():
         sched.results("r0")                # oldest evicted
     sched.submit(Request("r0"))            # ...and its rid is reusable
     assert sched.telemetry("r5").done_tick is not None
+    # telemetry of evicted requests is gone too (no unbounded dict)
+    assert set(sched.stats_by_rid) == {"r3", "r4", "r5", "r0"}
+
+
+def test_call_log_retention_is_bounded():
+    """Regression (ISSUE 4): the engine-call log must be a ring buffer —
+    a long-lived gateway keeps only the newest `call_log_len` calls."""
+    sched = _mk_sched("scan", chunk_t=2, call_log_len=5)
+    sched.submit(Request("a", np.zeros((40,), np.float32)))
+    sched.close("a")
+    ticks = sched.drain()
+    assert ticks == 20                     # 40 samples / chunk_t=2
+    assert len(sched.call_log) == 5        # ring buffer, not 20 entries
+    assert all(c["kind"] == "fused" for c in sched.call_log)
+    # stats() keeps working on the bounded window
+    assert sched.stats()["chunk_latency"]["calls"] == 5
 
 
 def test_serve_streams_outlives_retention_cap():

@@ -3,6 +3,8 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
+from conftest import given_or_cases
+
 from repro.fixedpoint import QFormat, teda_q_scan_chan
 from repro.kernels.ops import teda_q_scan_tpu, teda_scan_tpu
 
@@ -117,3 +119,105 @@ def test_pre_quantized_int_input_passthrough():
     _, out_b = teda_q_scan_tpu(jnp.asarray(x), FMT, block_t=32)
     np.testing.assert_array_equal(np.asarray(out_a["ecc"]),
                                   np.asarray(out_b["ecc"]))
+
+
+# -------------------------------------------- ragged per-channel vlen
+def _assert_ragged_bit_exact(x, lens, fmt=FMT, m=3.0, block_t=8):
+    """One ragged kernel call; asserts the no-flags-beyond-vlen rule."""
+    t, c = x.shape
+    fin, out = teda_q_scan_tpu(jnp.asarray(x), fmt, m,
+                               valid_lens=np.asarray(lens, np.int32),
+                               block_t=block_t)
+    flags = np.asarray(out["outlier"])
+    assert not flags[np.arange(t)[:, None] >= np.asarray(lens)[None, :]
+                     ].any()
+    return fin, out
+
+
+@given_or_cases(
+    "t,c,seed,block_t",
+    [(24, 3, 0, 8), (64, 4, 1, 32), (100, 2, 2, 8), (40, 5, 3, 8)],
+    lambda st: dict(t=st.integers(2, 128), c=st.integers(1, 6),
+                    seed=st.integers(0, 2 ** 16),
+                    block_t=st.sampled_from([8, 32])),
+    max_examples=10)
+def test_vlen_vector_matches_chan_oracle(t, c, seed, block_t):
+    """Per-channel vlen vector vs `teda_q_scan_chan` on each prefix:
+    exact bits for outputs AND final state, incl. vlen 0 / T / rest."""
+    rng = np.random.default_rng(seed)
+    x = _x(t, c, seed=seed)
+    lens = rng.integers(0, t + 1, size=c).astype(np.int32)
+    lens[rng.integers(0, c)] = 0
+    lens[rng.integers(0, c)] = t
+    fin, out = _assert_ragged_bit_exact(x, lens, block_t=block_t)
+    np.testing.assert_array_equal(np.asarray(fin.k), lens)
+    for ch in range(c):
+        n = int(lens[ch])
+        if n == 0:
+            assert int(np.asarray(fin.mean)[ch, 0]) == 0
+            assert int(np.asarray(fin.var)[ch]) == 0
+            continue
+        f, o = teda_q_scan_chan(jnp.asarray(x[:n, ch:ch + 1]), FMT, 3.0)
+        np.testing.assert_array_equal(np.asarray(out["ecc"])[:n, ch],
+                                      np.asarray(o["ecc"])[:, 0],
+                                      err_msg=f"ch{ch}")
+        np.testing.assert_array_equal(
+            np.asarray(out["outlier"])[:n, ch],
+            np.asarray(o["outlier"])[:, 0], err_msg=f"ch{ch}")
+        np.testing.assert_array_equal(np.asarray(fin.mean)[ch, 0],
+                                      np.asarray(f[1])[0])
+        np.testing.assert_array_equal(np.asarray(fin.var)[ch],
+                                      np.asarray(f[2])[0])
+
+
+def test_vlen_degenerate_vectors_match_scalar_bits():
+    """All-T vlen == the default scalar path bit-for-bit (one program,
+    broadcast input); all-zeros leaves the carried state untouched."""
+    x = _x(70, 3, seed=21)
+    fin_a, out_a = teda_q_scan_tpu(jnp.asarray(x), FMT, block_t=8)
+    fin_b, out_b = teda_q_scan_tpu(jnp.asarray(x), FMT, block_t=8,
+                                   valid_lens=np.full((3,), 70, np.int32))
+    for key in ("mean", "var", "ecc", "outlier"):
+        np.testing.assert_array_equal(np.asarray(out_a[key]),
+                                      np.asarray(out_b[key]), err_msg=key)
+    np.testing.assert_array_equal(np.asarray(fin_a.mean),
+                                  np.asarray(fin_b.mean))
+    np.testing.assert_array_equal(np.asarray(fin_a.var),
+                                  np.asarray(fin_b.var))
+    # all-zeros: the frozen carries round-trip exactly
+    fin_z, out_z = teda_q_scan_tpu(jnp.asarray(x), FMT, state=fin_a,
+                                   valid_lens=np.zeros((3,), np.int32),
+                                   block_t=8)
+    np.testing.assert_array_equal(np.asarray(fin_z.k),
+                                  np.asarray(fin_a.k))
+    np.testing.assert_array_equal(np.asarray(fin_z.mean),
+                                  np.asarray(fin_a.mean))
+    np.testing.assert_array_equal(np.asarray(fin_z.var),
+                                  np.asarray(fin_a.var))
+    assert not np.asarray(out_z["outlier"]).any()
+
+
+def test_vlen_ragged_state_carry_bit_exact():
+    """Ragged call chaining: each channel resumes from its own frozen
+    prefix, matching one uninterrupted oracle run bit-for-bit."""
+    x = _x(90, 2, seed=22)
+    lens1 = np.array([40, 9], np.int32)
+    st1, _ = teda_q_scan_tpu(jnp.asarray(x[:48]), FMT, valid_lens=lens1,
+                             block_t=8)
+    take2 = np.array([50, 81], np.int32)
+    x2 = np.zeros((88, 2), np.float32)
+    for ch in range(2):
+        a, b = int(lens1[ch]), int(lens1[ch] + take2[ch])
+        x2[: take2[ch], ch] = x[a:b, ch]
+    st2, out2 = teda_q_scan_tpu(jnp.asarray(x2), FMT, state=st1,
+                                valid_lens=take2, block_t=8)
+    np.testing.assert_array_equal(np.asarray(st2.k), lens1 + take2)
+    for ch in range(2):
+        f, o = teda_q_scan_chan(jnp.asarray(x[:90, ch:ch + 1]), FMT, 3.0)
+        np.testing.assert_array_equal(
+            np.asarray(out2["ecc"])[: take2[ch], ch],
+            np.asarray(o["ecc"])[lens1[ch]:, 0], err_msg=f"ch{ch}")
+        np.testing.assert_array_equal(np.asarray(st2.mean)[ch, 0],
+                                      np.asarray(f[1])[0])
+        np.testing.assert_array_equal(np.asarray(st2.var)[ch],
+                                      np.asarray(f[2])[0])
