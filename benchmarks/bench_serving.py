@@ -8,16 +8,24 @@ rate, and the gateway's sustained requests/s, samples/s, per-chunk
 latency percentiles, queue waits and backpressure events are recorded
 per backend.
 
-Two load shapes per backend x offered load:
+Three load shapes per backend x offered load:
 
   * "uniform" — every tenant has the same history/live split;
   * "mixed"   — alternating prefill-heavy tenants (double-length
-    history with an odd remainder tail, no live feed) and decode-phase
-    tenants (near-empty history, double-length live feed).  This is
-    the shape the fused ragged (chunk_t, C) program exists for: both
-    kinds of slot retire their own sample count in one call
-    (ISSUE 4 — the old bulk/trickle split drained prefill tails
-    1 sample/tick).
+    history with an odd remainder tail, no live feed; admission class
+    "bulk") and decode-phase tenants (near-empty history,
+    double-length live feed; class "latency").  This is the shape the
+    fused ragged (chunk_t, C) program exists for — both kinds of slot
+    retire their own sample count in one call (ISSUE 4) — and now
+    also the weighted-admission shape: bulk prefills admit at 1/4 the
+    latency class's weight (ISSUE 5), with per-class queue waits in
+    the row;
+  * "decode"  — every tenant is decode-phase (tiny history, long live
+    trickle), so after the first ticks every call retires <= 1 sample
+    per slot: the adaptive-chunk fast path (ISSUE 5), where ticks ride
+    the short cached (decode_t, C) program instead of the full chunk.
+    The row's `short_ticks` counts those; `samples_per_s` on this row
+    is what the CI regression gate guards for the fast path.
 
 Emits a JSON table (one row per backend x offered load x shape):
 
@@ -36,46 +44,63 @@ from repro.fixedpoint import QFormat
 from repro.launch.serve import serve_streams
 
 
+CLASS_WEIGHTS = {"latency": 4.0, "bulk": 1.0}
+
+
 def make_streams(n: int, history: int, live: int, seed: int = 0,
                  shape: str = "uniform"):
     """Synthetic tenant mix: drifting means, per-tenant sensitivity,
     an anomaly burst on every third stream.  `shape="mixed"` alternates
-    prefill-heavy and decode-phase tenants (see module docs)."""
+    prefill-heavy ("bulk") and decode-phase ("latency") tenants;
+    `shape="decode"` makes every tenant decode-phase (see module
+    docs)."""
     rng = np.random.default_rng(seed)
     out = []
     for i in range(n):
+        cls = "default"
         if shape == "mixed" and i % 2 == 0:
             h_i, l_i = 2 * history + 3, 0     # prefill-heavy, ragged tail
+            cls = "bulk"
         elif shape == "mixed":
             h_i, l_i = 3, 2 * live            # decode-phase
+            cls = "latency"
+        elif shape == "decode":
+            h_i, l_i = 2, 2 * live            # decode trickle only
         else:
             h_i, l_i = history, live
         h = rng.normal(loc=i * 0.1, size=(h_i,)).astype(np.float32)
         lv = rng.normal(loc=i * 0.1, size=(l_i,)).astype(np.float32)
         if l_i and i % 3 == 0:
             lv[l_i // 2] += 15.0
-        out.append((f"tenant-{i}", h, lv, 2.0 + (i % 3)))
+        out.append((f"tenant-{i}", h, lv, 2.0 + (i % 3), cls))
     return out
 
 
 def bench_one(backend: str, offered_load: int, *, n_requests: int,
-              history: int, live: int, chunk_t: int, buckets,
-              queue_limit: int, fmt: QFormat, interpret,
+              history: int, live: int, chunk_t: int, decode_t: int,
+              buckets, queue_limit: int, fmt: QFormat, interpret,
               shape: str = "uniform", reps: int = 2) -> dict:
     # each rep builds a fresh scheduler (compiles included); report the
     # best rep so the row reflects the machine, not one-off jitter
     runs = [serve_streams(
         make_streams(n_requests, history, live, shape=shape),
-        backend=backend, buckets=buckets, chunk_t=chunk_t, fmt=fmt,
-        interpret=interpret, queue_limit=queue_limit,
+        backend=backend, buckets=buckets, chunk_t=chunk_t,
+        decode_t=decode_t, fmt=fmt, interpret=interpret,
+        queue_limit=queue_limit, class_weights=dict(CLASS_WEIGHTS),
         arrivals_per_tick=offered_load, measure_latency=True)
         for _ in range(reps)]
     res = max(runs, key=lambda r: r["samples_per_s"])
     lat = res["chunk_latency"]
+    classes = {
+        cls: {"completed": c.get("completed", 0),
+              "queue_wait_ticks_p95": c.get("queue_wait_ticks_p95", 0.0),
+              "latency_ticks_p95": c.get("latency_ticks_p95", 0.0)}
+        for cls, c in res["classes"].items()}
     return {
         "backend": backend,
         "offered_load": offered_load,
         "shape": shape,
+        "decode_t": decode_t,
         "requests": res["requests"],
         "samples": res["samples"],
         "wall_s": res["wall_s"],
@@ -86,14 +111,17 @@ def bench_one(backend: str, offered_load: int, *, n_requests: int,
         "chunk_lat_p95_ms": lat.get("p95_ms", 0.0),
         "queue_wait_ticks_p95": res["queue_wait_ticks_p95"],
         "rejected_submits": res["rejected_submits"],
+        "short_ticks": res["short_ticks"],
+        "programs": len(res["programs"]),
+        "classes": classes,
         "pool_resizes": res["pool"]["resizes"],
         "flagged": len(res["flagged"]),
     }
 
 
 def run(backends, loads, *, n_requests, history, live, chunk_t, buckets,
-        queue_limit, wl=32, fl=20, interpret=None, reps=2,
-        shapes=("uniform", "mixed")):
+        queue_limit, decode_t=1, wl=32, fl=20, interpret=None, reps=2,
+        shapes=("uniform", "mixed", "decode")):
     fmt = QFormat(wl, fl)
     rows = []
     for backend in backends:
@@ -102,7 +130,8 @@ def run(backends, loads, *, n_requests, history, live, chunk_t, buckets,
                 rows.append(bench_one(
                     backend, load, n_requests=n_requests,
                     history=history, live=live, chunk_t=chunk_t,
-                    buckets=buckets, queue_limit=queue_limit, fmt=fmt,
+                    decode_t=decode_t, buckets=buckets,
+                    queue_limit=queue_limit, fmt=fmt,
                     interpret=interpret, shape=shape, reps=reps))
     return rows
 
@@ -113,10 +142,13 @@ def main(argv=None):
     ap.add_argument("--history", type=int, default=1024)
     ap.add_argument("--live", type=int, default=128)
     ap.add_argument("--chunk-t", type=int, default=128)
+    ap.add_argument("--decode-t", type=int, default=1,
+                    help="short program length for decode-only ticks")
     ap.add_argument("--loads", default="2,8,32",
                     help="comma-separated arrivals per tick")
-    ap.add_argument("--shapes", default="uniform,mixed",
-                    help="comma-separated load shapes (uniform, mixed)")
+    ap.add_argument("--shapes", default="uniform,mixed,decode",
+                    help="comma-separated load shapes "
+                         "(uniform, mixed, decode)")
     ap.add_argument("--backends", default=",".join(list_backends()))
     ap.add_argument("--buckets", default="8,16,32,64")
     ap.add_argument("--queue-limit", type=int, default=16)
@@ -130,10 +162,12 @@ def main(argv=None):
     if args.smoke:
         n_requests, history, live, chunk_t = 6, 24, 6, 8
         loads, buckets, queue_limit = [2, 6], (4, 8), 4
-        shapes, interpret = ("uniform", "mixed"), True
+        shapes, interpret = ("uniform", "mixed", "decode"), True
+        decode_t = 1
     else:
         n_requests, history = args.requests, args.history
         live, chunk_t = args.live, args.chunk_t
+        decode_t = args.decode_t
         loads = [int(s) for s in args.loads.split(",")]
         shapes = tuple(s for s in args.shapes.split(",") if s)
         buckets = tuple(int(s) for s in args.buckets.split(","))
@@ -142,9 +176,9 @@ def main(argv=None):
     backends = [b for b in args.backends.split(",") if b]
 
     rows = run(backends, loads, n_requests=n_requests, history=history,
-               live=live, chunk_t=chunk_t, buckets=buckets,
-               queue_limit=queue_limit, wl=args.wl, fl=args.fl,
-               interpret=interpret, shapes=shapes)
+               live=live, chunk_t=chunk_t, decode_t=decode_t,
+               buckets=buckets, queue_limit=queue_limit, wl=args.wl,
+               fl=args.fl, interpret=interpret, shapes=shapes)
     doc = {"bench": "serving_throughput", "smoke": bool(args.smoke),
            "rows": rows}
     text = json.dumps(doc, indent=2)

@@ -27,8 +27,8 @@ import shutil
 import sys
 
 # row fields that identify a configuration (everything else is measured)
-ID_KEYS = ("bench", "backend", "chunk_t", "offered_load", "shape",
-           "channels")
+ID_KEYS = ("bench", "backend", "chunk_t", "decode_t", "offered_load",
+           "shape", "channels")
 METRIC = "samples_per_s"
 
 

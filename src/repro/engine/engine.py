@@ -63,6 +63,11 @@ class StreamEngine:
         # per-slot outlier sensitivity, eq (6) m — float even on the Q
         # path (the backend quantizes m^2+1 itself)
         self._m = np.full((self.capacity,), self.default_m, np.float32)
+        # chunk lengths this engine has executed: together with the
+        # capacity, T keys the jit program cache, so a flat set after
+        # warmup means no tick recompiles (the adaptive-chunk guarantee
+        # surfaced through SlotPool.stats()["programs"])
+        self._t_shapes: set = set()
 
         def core(x, k, mean, var, vlen, m):
             st, outs = engine_process(
@@ -164,6 +169,12 @@ class StreamEngine:
         bool mask or integer indices) — sugar for vlen=0 on everyone
         else, composable with `valid_lens`.  Detached slots are always
         held at vlen=0 regardless of either argument.
+
+        The call is non-blocking: the returned `ecc`/`outlier` (and the
+        carried state) are JAX async-dispatch futures, so a scheduler
+        can overlap its next tick's host bookkeeping with the device
+        compute and fetch verdicts only when it consumes them
+        (`launch/batching.py`'s double-buffered loop).
         """
         x = jnp.asarray(x)
         if x.ndim != 2 or x.shape[1] != self.capacity:
@@ -200,6 +211,7 @@ class StreamEngine:
         mv = self._m
         if self._mesh is None and (mv == mv[0]).all():
             mv = mv[0]
+        self._t_shapes.add(int(t_len))
         (k, mean, var), (ecc, outlier) = self._fn(
             x, st.k, st.mean, st.var, vl,
             jnp.asarray(self.backend.quantize_m(mv)))
@@ -220,6 +232,12 @@ class StreamEngine:
     def slot_m(self) -> np.ndarray:
         """Per-slot outlier sensitivity (eq (6) m), a (capacity,) copy."""
         return self._m.copy()
+
+    @property
+    def program_shapes(self) -> list:
+        """Sorted chunk lengths T this engine has executed — each is
+        one entry of the jit program cache at this capacity."""
+        return sorted(self._t_shapes)
 
     def teda_state(self) -> TedaState:
         """The packed state in the `repro.core` TedaState layout."""

@@ -171,11 +171,26 @@ class SlotPool:
         the *current* `pool.capacity`: schedulers re-read it after
         acquire/release (`_resize` re-pads the packed *state* across
         buckets, but per-call vectors are built fresh each tick).
+
+        Non-blocking: the returned verdicts are async-dispatch futures
+        (see `StreamEngine.process`).  A later `_resize` is the one
+        state-dependent sync point — it fetches the packed state to
+        re-pad it, so it waits for in-flight calls; resizes are rare
+        (bucket transitions only) and never invalidate outputs already
+        dispatched at the old capacity.
         """
         return self.engine.process(x, active=active,
                                    valid_lens=valid_lens)
 
+    def programs(self) -> list:
+        """Every (capacity, T) program-cache key executed so far,
+        across all cached bucket engines.  Flat after warmup = the
+        adaptive-chunk path recompiles nothing."""
+        return sorted((cap, t) for cap, eng in self._engines.items()
+                      for t in eng.program_shapes)
+
     def stats(self) -> dict:
         return {"bucket": self._bucket, "buckets": list(self.buckets),
                 "occupancy": self.occupancy, "resizes": self.resizes,
-                "compiled_buckets": sorted(self._engines)}
+                "compiled_buckets": sorted(self._engines),
+                "programs": self.programs()}

@@ -15,11 +15,36 @@ retires `min(pending_c, chunk_t)` samples via the engine's per-slot
 `valid_lens` vector — a prefill-heavy slot rides the full chunk, a
 decode-phase slot retires its one live sample, and a slot with nothing
 pending is suspended at vlen=0 (frozen state, no flags, no detach) —
-all in the same call.  This kills both the old bulk/trickle program
-split (two dispatches per tick over disjoint slot sets) and the
-1-sample-per-tick prefill-tail drain: a history of H samples now
-retires in ceil(H / chunk_t) ticks instead of
-floor(H / chunk_t) + (H mod chunk_t).
+all in the same call.
+
+Three scheduler-level optimisations ride on that fused call:
+
+  * **Async double-buffered tick loop** — `step()` dispatches the
+    fused call and returns without fetching its outputs (JAX async
+    dispatch keeps the device busy); the next tick's host bookkeeping
+    (admission, `take`, vlens assembly) overlaps with the in-flight
+    device compute, and the *previous* tick's outputs are fetched only
+    then — or earlier, when `results()`/`telemetry()` consume them or
+    a request completes.  Bit-exact with the synchronous loop: the
+    engine-call sequence depends only on host-side counters, never on
+    fetched verdicts (`tests/test_batching.py::test_async_equals_sync`).
+    `measure_latency=True` keeps the fully synchronous loop (block
+    after every call) so per-call wall times stay honest.
+
+  * **Adaptive chunk_t** — when every ready slot is in decode phase
+    (pending <= `decode_t`, default 1), the tick rides a short cached
+    (decode_t, C) program instead of the full (chunk_t, C) one:
+    decode-only ticks stop paying a chunk_t-deep program to retire one
+    sample per slot.  Both shapes are cached per capacity bucket (the
+    jit program cache keyed on (capacity, t) — see
+    `SlotPool.stats()["programs"]`), so after warmup no tick
+    recompiles.
+
+  * **Priority classes / weighted admission** — `Request(priority=)`
+    names an admission class; `class_weights` gives each class a
+    weighted-deficit share of slot acquisitions, so a burst of bulk
+    prefills cannot starve latency-class tenants.  Per-class
+    queue-wait/latency telemetry is in `stats()["classes"]`.
 
 Ragged interleaved execution is bit-exact with running each request
 alone — per-slot valid-length masking inside the kernels
@@ -27,16 +52,16 @@ alone — per-slot valid-length masking inside the kernels
 tests/test_batching.py on the Q path.
 
 Admission is a bounded queue: `submit` returns False when the queue is
-full (caller backpressure), and requests wait in the queue while every
-bucket of the pool is occupied (`PoolFull` backpressure inside the
-scheduler).  Per-request telemetry (queue wait, chunk latencies, flag
-counts) is kept for the serving benchmark and the gateway in
-`launch/serve.py`.
+full (caller backpressure), and requests wait in their class queue
+while every bucket of the pool is occupied (`PoolFull` backpressure
+inside the scheduler).  Per-request telemetry (queue wait, per-call
+(wall, retired) latency pairs, flag counts) is kept for the serving
+benchmark and the gateway in `launch/serve.py`.
 """
 from __future__ import annotations
 
 import time
-from collections import deque
+from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -45,9 +70,16 @@ import numpy as np
 
 from repro.engine import PoolFull, SlotPool
 
-__all__ = ["Request", "RequestStats", "BatchingScheduler"]
+__all__ = ["Request", "RequestStats", "BatchingScheduler",
+           "EvictedRequest"]
 
 QUEUED, PREFILL, DECODE, DONE = "queued", "prefill", "decode", "done"
+
+
+class EvictedRequest(KeyError):
+    """The request completed but its record aged out of the
+    `keep_finished` retention window — distinct from a rid that was
+    never submitted, so callers can tell "gone" from "wrong"."""
 
 
 @dataclass
@@ -56,7 +88,8 @@ class Request:
 
     `m` is this tenant's outlier sensitivity (None: scheduler default).
     `closed` requests complete once their pending samples drain; open
-    requests keep their slot and wait for `feed`.
+    requests keep their slot and wait for `feed`.  `priority` names
+    the admission class (see `BatchingScheduler(class_weights=)`).
     """
 
     rid: str
@@ -64,14 +97,23 @@ class Request:
         default_factory=lambda: np.zeros((0,), np.float32))
     m: Optional[float] = None
     closed: bool = False
+    priority: str = "default"
 
 
 @dataclass
 class RequestStats:
-    """Per-request telemetry, filled in as the lifecycle advances."""
+    """Per-request telemetry, filled in as the lifecycle advances.
+
+    `chunk_latency_s` holds (wall_s, retired_this_call) pairs: the
+    fused call's wall time is shared by every member slot, so honest
+    percentiles weight each observation by the samples that request
+    actually retired in the call, instead of attributing the whole
+    wall to a slot that retired one sample.
+    """
 
     rid: str
     submitted_tick: int
+    priority: str = "default"
     admitted_tick: Optional[int] = None
     done_tick: Optional[int] = None
     slot: Optional[int] = None
@@ -79,7 +121,7 @@ class RequestStats:
     flags: int = 0
     prefill_chunks: int = 0
     decode_steps: int = 0
-    chunk_latency_s: List[float] = field(default_factory=list)
+    chunk_latency_s: List[Tuple[float, int]] = field(default_factory=list)
 
     @property
     def queue_wait_ticks(self) -> Optional[int]:
@@ -92,17 +134,23 @@ class _Run:
     """Internal per-request runtime record (admitted requests only)."""
 
     __slots__ = ("req", "slot", "pending", "cursor", "phase", "stats",
-                 "ecc_parts", "outlier_parts")
+                 "ecc_parts", "outlier_parts", "hist_len", "consumed",
+                 "inflight")
 
     def __init__(self, req: Request, slot: int, stats: RequestStats):
         self.req = req
         self.slot = slot
         self.pending = np.asarray(req.history, np.float32).reshape(-1)
         self.cursor = 0
+        # the replayed prefix: everything backlogged at admission is
+        # prefill; samples fed after admission are the decode trickle
+        self.hist_len = self.pending.shape[0]
+        self.consumed = 0
         self.phase = PREFILL if self.avail else DECODE
         self.stats = stats
         self.ecc_parts: List[np.ndarray] = []
         self.outlier_parts: List[np.ndarray] = []
+        self.inflight = 0  # dispatched calls not yet host-fetched
 
     @property
     def avail(self) -> int:
@@ -119,67 +167,132 @@ class _Run:
     def take(self, n: int) -> np.ndarray:
         out = self.pending[self.cursor:self.cursor + n]
         self.cursor += n
+        self.consumed += n
+        if self.phase == PREFILL and self.consumed >= self.hist_len:
+            self.phase = DECODE  # history cursor passed the prefix
         return out
+
+
+class _InFlight:
+    """One dispatched-but-unfetched fused call (device arrays are JAX
+    async futures; fetching them is the sync point)."""
+
+    __slots__ = ("out", "members", "t_len", "tick", "t0", "sync_wall")
+
+    def __init__(self, out, members, t_len, tick, t0, sync_wall):
+        self.out = out              # {"ecc", "outlier"} device arrays
+        self.members = members      # [(run, slot, n)] at dispatch time
+        self.t_len = t_len
+        self.tick = tick
+        self.t0 = t0
+        self.sync_wall = sync_wall  # honest wall when measured sync
 
 
 class BatchingScheduler:
     """Continuous batching of TEDA detection requests over a SlotPool.
 
-    >>> sched = BatchingScheduler("pallas", chunk_t=64)
-    >>> sched.submit(Request("tenant-a", history, m=2.5))
+    >>> sched = BatchingScheduler("pallas", chunk_t=64,
+    ...                           class_weights={"latency": 4, "bulk": 1})
+    >>> sched.submit(Request("tenant-a", history, m=2.5,
+    ...                      priority="latency"))
     >>> sched.feed("tenant-a", live_chunk); sched.step()
     >>> sched.close("tenant-a"); sched.drain()
     >>> sched.results("tenant-a")["outlier"]
 
-    One `step()` = admit what fits, one fused ragged (chunk_t, C) call
-    retiring min(pending, chunk_t) samples per slot, retire what
-    finished.  All engine options pass through to the pool.
+    One `step()` = admit what the deficit-weighted class queues allow,
+    one fused ragged engine call retiring min(pending, t) samples per
+    slot on the adaptive (t, C) program, retire the *previous* tick's
+    host-fetched outputs, complete what finished.  All engine options
+    pass through to the pool.
     """
 
     def __init__(self, backend: str = "scan", *,
                  buckets: Tuple[int, ...] = (8, 16, 32, 64),
-                 chunk_t: int = 32, m: float = 3.0,
+                 chunk_t: int = 32, decode_t: int = 1, m: float = 3.0,
                  queue_limit: int = 64, collect: bool = True,
                  measure_latency: bool = False,
                  keep_finished: int = 1024,
-                 call_log_len: int = 4096, **engine_opts):
+                 call_log_len: int = 4096,
+                 latency_log_len: int = 4096,
+                 class_weights: Optional[Dict[str, float]] = None,
+                 **engine_opts):
         if chunk_t < 2:
             raise ValueError("chunk_t must be >= 2")
-        # decode-only ticks retire 1 sample/slot of the (chunk_t, C)
+        if not 1 <= decode_t <= chunk_t:
+            raise ValueError(
+                f"decode_t must lie in [1, chunk_t={chunk_t}], "
+                f"got {decode_t}")
+        # decode-only ticks retire 1 sample/slot of the (decode_t, C)
         # program: a small block keeps the padded time extent (and
         # interpret-mode cost) proportionate
         engine_opts.setdefault("block_t", 8)
         self.pool = SlotPool(backend, buckets=buckets, m=m, **engine_opts)
         self.chunk_t = int(chunk_t)
+        self.decode_t = int(decode_t)
         self.queue_limit = int(queue_limit)
         self.collect = collect
+        # measure_latency=True keeps the synchronous loop (block after
+        # every fused call) so per-call wall times are honest device
+        # latencies; False runs the async double-buffered loop
         self.measure_latency = measure_latency
         # retention caps: a forever-running gateway must not accumulate
         # per-request records without bound.  The oldest finished
         # requests (results + telemetry; their rid becomes reusable)
         # and engine-call log entries are evicted past these limits.
         self.keep_finished = int(keep_finished)
-        self.queue: deque[Request] = deque()
+        self.latency_log_len = int(latency_log_len)
+        if class_weights is not None and any(
+                w <= 0 for w in class_weights.values()):
+            raise ValueError(
+                f"class weights must be positive: {class_weights}")
+        self._weights: Dict[str, float] = dict(class_weights or {})
+        self._ctor_classes = frozenset(self._weights)
+        self._queues: "OrderedDict[str, deque]" = OrderedDict()
+        self._deficit: Dict[str, float] = {}
         self.runs: Dict[str, _Run] = {}     # admitted, not yet done
         self._finished: Dict[str, _Run] = {}
+        self._evicted: deque = deque(maxlen=max(4096, self.keep_finished))
+        # rid -> live entries in the ring (a rid can re-enter after a
+        # resubmit cycle, so membership is refcounted, not a set)
+        self._evicted_counts: Dict[str, int] = {}
         self.stats_by_rid: Dict[str, RequestStats] = {}
         self.tick_no = 0
         self.rejected = 0
         self.completed = 0
+        self.short_ticks = 0  # ticks that rode the (decode_t, C) program
         self.call_log: deque = deque(maxlen=int(call_log_len))
+        self._inflight: deque = deque()   # dispatched, not host-fetched
+        self._deferred_flagged: List[str] = []
 
     # --------------------------------------------------------- intake
+    @property
+    def queue(self) -> List[Request]:
+        """Queued-for-admission requests across every class (FIFO
+        within a class; class interleaving is decided at admission)."""
+        return [req for q in self._queues.values() for req in q]
+
+    @property
+    def queued_total(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
     def submit(self, req: Request) -> bool:
         """Queue a request for admission; False = queue full (caller
         backpressure — retry later or shed load)."""
         if req.rid in self.stats_by_rid:
             raise ValueError(f"duplicate request id {req.rid!r}")
-        if len(self.queue) >= self.queue_limit:
+        if self.queued_total >= self.queue_limit:
             self.rejected += 1
             return False
+        # rid is reusable post-evict (stale ring entries age out inert)
+        self._evicted_counts.pop(req.rid, None)
+        if req.priority not in self._weights:
+            # unknown classes admit at unit weight (documented) rather
+            # than rejecting: the weights dict is a tuning knob
+            self._weights[req.priority] = 1.0
         self.stats_by_rid[req.rid] = RequestStats(
-            rid=req.rid, submitted_tick=self.tick_no)
-        self.queue.append(req)
+            rid=req.rid, submitted_tick=self.tick_no,
+            priority=req.priority)
+        self._queues.setdefault(req.priority, deque()).append(req)
         return True
 
     def feed(self, rid: str, samples) -> None:
@@ -214,75 +327,150 @@ class BatchingScheduler:
 
     # --------------------------------------------------------- the tick
     def _admit(self, events: dict) -> None:
-        while self.queue:
-            req = self.queue[0]
-            try:
-                slot = int(self.pool.acquire(1, m=req.m)[0])
-            except PoolFull:
-                break  # pool backpressure: wait for a release
-            self.queue.popleft()
-            st = self.stats_by_rid[req.rid]
-            st.admitted_tick = self.tick_no
-            st.slot = slot
-            self.runs[req.rid] = _Run(req, slot, st)
-            events["admitted"].append(req.rid)
+        """Weighted-deficit round robin across the class queues.
 
-    def _call(self, members: List[_Run], events: dict) -> None:
-        """One fused ragged (chunk_t, C) engine call: slot c retires
-        min(pending_c, chunk_t) samples via the per-slot valid-length
-        vector; everyone else is suspended at vlen=0."""
+        Every pass tops each backlogged class's deficit up by its
+        weight; a class admits heads while its deficit covers the unit
+        cost.  Drained classes are pruned entirely (no deficit
+        hoarding, and per-class state stays bounded by the *backlogged*
+        class count, not every priority string ever seen — ctor-declared
+        weights are the one retained configuration), `PoolFull` ends
+        the round — leftover deficits carry to the next tick, so a
+        class starved by backpressure catches up first.
+        """
+        while True:
+            for c in [c for c, q in self._queues.items() if not q]:
+                del self._queues[c]
+                self._deficit.pop(c, None)
+                if c not in self._ctor_classes:
+                    self._weights.pop(c, None)
+            backlogged = list(self._queues)
+            if not backlogged:
+                return
+            # top every backlogged class up *before* admitting, so a
+            # round cut short by PoolFull credits all of them equally
+            for cls in backlogged:
+                self._deficit[cls] = (self._deficit.get(cls, 0.0)
+                                      + self._weights[cls])
+            for cls in backlogged:
+                q = self._queues[cls]
+                while q and self._deficit[cls] >= 1.0:
+                    req = q[0]
+                    try:
+                        slot = int(self.pool.acquire(1, m=req.m)[0])
+                    except PoolFull:
+                        return  # pool backpressure: wait for a release
+                    q.popleft()
+                    self._deficit[cls] -= 1.0
+                    st = self.stats_by_rid[req.rid]
+                    st.admitted_tick = self.tick_no
+                    st.slot = slot
+                    self.runs[req.rid] = _Run(req, slot, st)
+                    events["admitted"].append(req.rid)
+
+    def _dispatch(self, members: List[_Run]) -> None:
+        """One fused ragged (t, C) engine call: slot c retires
+        min(pending_c, t) samples via the per-slot valid-length
+        vector; everyone else is suspended at vlen=0.  Decode-only
+        ticks (every member's pending <= decode_t) ride the short
+        cached (decode_t, C) program instead of the full chunk."""
         cap = self.pool.capacity
         t_len = self.chunk_t
+        if all(r.avail <= self.decode_t for r in members):
+            t_len = self.decode_t
+            self.short_ticks += 1
         x = np.zeros((t_len, cap), np.float32)
         vlens = np.zeros((cap,), np.int32)
-        taken: Dict[str, int] = {}
+        mem = []
         for run in members:
             n = min(run.avail, t_len)
             x[:n, run.slot] = run.take(n)
             vlens[run.slot] = n
-            taken[run.req.rid] = n
+            run.inflight += 1
+            mem.append((run, run.slot, n))
         t0 = time.perf_counter()
         out = self.pool.process(x, valid_lens=vlens)
+        sync_wall = None
         if self.measure_latency:
             jax.block_until_ready(out["ecc"])
-        wall = time.perf_counter() - t0
-        self.call_log.append({"kind": "fused", "t": t_len,
-                              "slots": len(members),
-                              "retired": int(vlens.sum()),
-                              "wall_s": wall})
-        outlier = np.asarray(out["outlier"])
-        ecc = np.asarray(out["ecc"]) if self.collect else None
-        for run in members:
+            sync_wall = time.perf_counter() - t0
+        self._inflight.append(_InFlight(
+            out, mem, t_len, self.tick_no, t0, sync_wall))
+
+    def _retire(self, inf: _InFlight, events: Optional[dict]) -> None:
+        """Fetch one in-flight call's outputs to host and account them.
+
+        The np.asarray fetch is the sync point; in the async loop it
+        lands one tick after dispatch, overlapped with the next call's
+        device compute.  With `events=None` (a flush outside `step`),
+        flagged rids are deferred into the next tick's events.
+        """
+        outlier = np.asarray(inf.out["outlier"])
+        ecc = np.asarray(inf.out["ecc"]) if self.collect else None
+        wall = (inf.sync_wall if inf.sync_wall is not None
+                else time.perf_counter() - inf.t0)
+        self.call_log.append({
+            "kind": "fused", "t": inf.t_len, "slots": len(inf.members),
+            "retired": int(sum(n for _, _, n in inf.members)),
+            "wall_s": wall, "sync": inf.sync_wall is not None})
+        flagged = (events["flagged"] if events is not None
+                   else self._deferred_flagged)
+        for run, slot, n in inf.members:
             st = run.stats
-            n = taken[run.req.rid]
             st.samples += n
-            if len(st.chunk_latency_s) < 4096:  # bounded per request
-                st.chunk_latency_s.append(wall)
-            col = outlier[:n, run.slot]
+            if len(st.chunk_latency_s) < self.latency_log_len:
+                st.chunk_latency_s.append((wall, n))
+            col = outlier[:n, slot]
             nf = int(col.sum())
             st.flags += nf
             if nf:
-                events["flagged"].append(run.req.rid)
+                flagged.append(run.req.rid)
             if n > 1:
                 st.prefill_chunks += 1  # a multi-sample (chunked) ride
             else:
                 st.decode_steps += 1    # the 1-sample decode trickle
             if self.collect:
-                run.ecc_parts.append(ecc[:n, run.slot].copy())
+                run.ecc_parts.append(ecc[:n, slot].copy())
                 run.outlier_parts.append(col.copy())
+            run.inflight -= 1
+
+    def _flush(self, events: Optional[dict] = None) -> None:
+        """Retire every in-flight call (the consume-side sync)."""
+        while self._inflight:
+            self._retire(self._inflight.popleft(), events)
 
     def step(self) -> dict:
-        """One scheduler tick; returns {admitted, flagged, completed}."""
+        """One scheduler tick; returns {admitted, flagged, completed}.
+
+        In the async loop, `flagged` events surface on the tick whose
+        retirement fetched them — one tick after dispatch.
+        """
         self.tick_no += 1
         events: dict = {"admitted": [], "flagged": [], "completed": []}
+        if self._deferred_flagged:
+            events["flagged"].extend(self._deferred_flagged)
+            self._deferred_flagged.clear()
+        # host bookkeeping first: admission + take + vlens assembly all
+        # overlap with the previous tick's in-flight device compute
         self._admit(events)
-
         ready = [r for r in self.runs.values() if r.avail > 0]
         if ready:
-            self._call(ready, events)
+            self._dispatch(ready)
+        # retire everything dispatched *before* this tick; this tick's
+        # call stays in flight across the tick boundary (the double
+        # buffer) unless the loop is synchronous
+        while self._inflight and (
+                self.measure_latency
+                or self._inflight[0].tick < self.tick_no):
+            self._retire(self._inflight.popleft(), events)
 
-        for rid in [rid for rid, r in self.runs.items()
-                    if r.req.closed and r.avail == 0]:
+        done = [rid for rid, r in self.runs.items()
+                if r.req.closed and r.avail == 0]
+        if any(self.runs[rid].inflight for rid in done):
+            # completion consumes results: sync the tail call now so
+            # done_tick/telemetry are final the tick the stream drains
+            self._flush(events)
+        for rid in done:
             run = self.runs.pop(rid)
             run.phase = DONE
             run.stats.done_tick = self.tick_no
@@ -294,46 +482,148 @@ class BatchingScheduler:
                 old = next(iter(self._finished))  # oldest completion
                 del self._finished[old]
                 self.stats_by_rid.pop(old, None)
+                self._note_evicted(old)
         return events
+
+    def _note_evicted(self, rid: str) -> None:
+        if len(self._evicted) == self._evicted.maxlen:
+            old = self._evicted.popleft()
+            n = self._evicted_counts.get(old, 0) - 1
+            if n <= 0:
+                self._evicted_counts.pop(old, None)
+            else:
+                self._evicted_counts[old] = n
+        self._evicted.append(rid)
+        self._evicted_counts[rid] = self._evicted_counts.get(rid, 0) + 1
 
     def drain(self, max_ticks: int = 100_000) -> int:
         """Tick until every submitted request has completed; returns
-        the number of ticks it took."""
+        the number of ticks it took.  Raises immediately — naming the
+        rids — when progress is impossible because requests are still
+        open (no pending samples, not closed): they hold their slots
+        waiting for `feed`, and only `close()` lets them finish."""
         start = self.tick_no
-        while self.queue or self.runs:
+        while self.queued_total or self.runs:
+            can_admit = bool(self.queued_total) and (
+                self.pool.occupancy < self.pool.max_capacity)
+            has_work = (self._inflight
+                        or any(r.avail > 0 for r in self.runs.values()))
+            completing = any(r.req.closed and r.avail == 0
+                             for r in self.runs.values())
+            if not (can_admit or has_work or completing):
+                open_rids = sorted(rid for rid, r in self.runs.items()
+                                   if not r.req.closed)
+                raise RuntimeError(
+                    f"drain stalled: requests {open_rids} are open with "
+                    "no pending samples — they wait on feed() forever; "
+                    "close() them (or feed more data) before drain()")
             if self.tick_no - start >= max_ticks:
                 raise RuntimeError(
                     f"drain exceeded {max_ticks} ticks with "
-                    f"{len(self.queue)} queued / {len(self.runs)} running"
-                    " requests (open requests need close())")
+                    f"{self.queued_total} queued / {len(self.runs)} "
+                    "running requests")
             self.step()
+        self._flush()
         return self.tick_no - start
 
     # --------------------------------------------------------- results
+    def _missing(self, rid: str) -> KeyError:
+        if rid in self._evicted_counts:
+            return EvictedRequest(
+                f"request {rid!r} completed and was evicted "
+                f"(keep_finished={self.keep_finished}); raise the "
+                "retention cap to keep results longer")
+        return KeyError(f"unknown request {rid!r}")
+
     def results(self, rid: str) -> dict:
-        """Per-sample verdicts of a request, in stream order."""
+        """Per-sample verdicts of a request, in stream order.  Syncs
+        the async loop: any of the request's in-flight samples are
+        fetched before returning."""
         run = self.runs.get(rid) or self._finished.get(rid)
         if run is None:
-            raise KeyError(f"unknown request {rid!r}")
+            raise self._missing(rid)
         if not self.collect:
             raise RuntimeError("scheduler built with collect=False")
+        if run.inflight:
+            self._flush()  # consume-side sync point
         cat = (lambda parts, dt: np.concatenate(parts)
                if parts else np.zeros((0,), dt))
         return {"ecc": cat(run.ecc_parts, np.float32),
                 "outlier": cat(run.outlier_parts, bool)}
 
     def telemetry(self, rid: str) -> RequestStats:
-        return self.stats_by_rid[rid]
+        """The request's `RequestStats` (sample/flag counts final only
+        after its in-flight calls retire — synced here)."""
+        st = self.stats_by_rid.get(rid)
+        if st is None:
+            raise self._missing(rid)
+        run = self.runs.get(rid)
+        if run is not None and run.inflight:
+            self._flush()  # consume-side sync point
+        return st
+
+    def request_phase(self, rid: str) -> str:
+        """Lifecycle phase of a request: queued/prefill/decode/done."""
+        run = self.runs.get(rid)
+        if run is not None:
+            return run.phase
+        if rid in self._finished:
+            return DONE
+        if rid in self.stats_by_rid:
+            return QUEUED
+        raise self._missing(rid)
 
     def stats(self) -> dict:
-        """Aggregate scheduler telemetry (the serving-bench payload)."""
+        """Aggregate scheduler telemetry (the serving-bench payload).
+
+        `chunk_latency` percentiles weight each call by the samples it
+        retired (a decode-only 1-sample call no longer counts the same
+        as a full prefill chunk); `classes` carries per-priority-class
+        queue-wait and completion-latency percentiles over the
+        retained requests; `programs` lists the (capacity, t) program
+        cache — its size going flat after warmup is the no-recompile
+        guarantee of the adaptive path.
+        """
         walls = [c["wall_s"] for c in self.call_log]
+        weights = [max(c["retired"], 1) for c in self.call_log]
         lat = {}
         if walls:
+            order = np.argsort(walls)
+            w = np.asarray(weights, np.float64)[order]
+            cum = np.cumsum(w) / w.sum()
+            sw = np.asarray(walls)[order]
+
+            def wpct(q):
+                i = min(int(np.searchsorted(cum, q)), len(sw) - 1)
+                return float(sw[i] * 1e3)
+
             lat = {"calls": len(walls),
-                   "p50_ms": float(np.percentile(walls, 50) * 1e3),
-                   "p95_ms": float(np.percentile(walls, 95) * 1e3)}
+                   "p50_ms": wpct(0.5), "p95_ms": wpct(0.95)}
+        classes: Dict[str, dict] = {}
+        for st in self.stats_by_rid.values():
+            c = classes.setdefault(st.priority, {
+                "queued": 0, "running": 0, "completed": 0,
+                "_waits": [], "_lats": []})
+            if st.done_tick is not None:
+                c["completed"] += 1
+                c["_lats"].append(st.done_tick - st.submitted_tick)
+            elif st.admitted_tick is not None:
+                c["running"] += 1
+            else:
+                c["queued"] += 1
+            if st.queue_wait_ticks is not None:
+                c["_waits"].append(st.queue_wait_ticks)
+        for c in classes.values():
+            for key, vals in (("queue_wait_ticks", c.pop("_waits")),
+                              ("latency_ticks", c.pop("_lats"))):
+                if vals:
+                    c[f"{key}_p50"] = float(np.percentile(vals, 50))
+                    c[f"{key}_p95"] = float(np.percentile(vals, 95))
         return {"ticks": self.tick_no, "completed": self.completed,
-                "running": len(self.runs), "queued": len(self.queue),
+                "running": len(self.runs), "queued": self.queued_total,
                 "rejected_submits": self.rejected,
-                "chunk_latency": lat, "pool": self.pool.stats()}
+                "inflight_calls": len(self._inflight),
+                "short_ticks": self.short_ticks,
+                "chunk_latency": lat, "classes": classes,
+                "programs": self.pool.programs(),
+                "pool": self.pool.stats()}

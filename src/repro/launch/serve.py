@@ -48,8 +48,7 @@ N_CHANNELS = 2  # per-request telemetry: (entropy, max-logit)
 
 
 # --------------------------------------------------------------- gateway
-def serve_streams(streams: Sequence[Tuple[str, np.ndarray, np.ndarray,
-                                          Optional[float]]],
+def serve_streams(streams: Sequence[tuple],
                   *, backend: str = "scan",
                   buckets: Tuple[int, ...] = (8, 16, 32, 64),
                   chunk_t: int = 32, m: float = 3.0, fmt=None,
@@ -61,22 +60,33 @@ def serve_streams(streams: Sequence[Tuple[str, np.ndarray, np.ndarray,
                   max_ticks: int = 1_000_000, **engine_opts) -> dict:
     """Serve tenant streams through the continuous-batching scheduler.
 
-    `streams` is a sequence of (rid, history, live, m) — history
-    replays as chunked prefill on admission, live samples are fed
-    `feed_per_tick` per tick (the decode trickle), `m` is the tenant's
-    sensitivity (None: the gateway default).  `arrivals_per_tick`
-    models offered load (None: everything offered up front); arrivals
-    the admission queue rejects are re-offered next tick, counted in
-    `rejected_submits` — the backpressure measure.
+    `streams` is a sequence of (rid, history, live, m) or
+    (rid, history, live, m, priority) tuples — history replays as
+    chunked prefill on admission, live samples are fed `feed_per_tick`
+    per tick (the decode trickle), `m` is the tenant's sensitivity
+    (None: the gateway default), `priority` its admission class (see
+    `BatchingScheduler(class_weights=)`; weights pass through
+    `engine_opts`, e.g. `class_weights={"latency": 4, "bulk": 1}`).
+    `arrivals_per_tick` models offered load (None: everything offered
+    up front); arrivals the admission queue rejects are re-offered
+    next tick, counted in `rejected_submits` — the backpressure
+    measure.
 
-    Returns sustained rates, latency percentiles, queue-wait stats and
-    per-request telemetry.
+    With `measure_latency=False` the scheduler runs its async
+    double-buffered loop (host bookkeeping overlapped with device
+    compute); True keeps the synchronous loop so per-chunk wall times
+    are honest latencies.
+
+    Returns sustained rates, latency percentiles, queue-wait stats,
+    per-priority-class telemetry and per-request telemetry.
     """
     class _Rec:
         __slots__ = ("req", "live", "fed", "closed")
 
-        def __init__(self, rid, history, live, m_req):
-            self.req = Request(rid, np.asarray(history, np.float32))
+        def __init__(self, rid, history, live, m_req,
+                     priority="default"):
+            self.req = Request(rid, np.asarray(history, np.float32),
+                               priority=priority)
             self.req.m = m_req
             self.live = np.asarray(live, np.float32).reshape(-1)
             self.fed = 0
@@ -131,7 +141,8 @@ def serve_streams(streams: Sequence[Tuple[str, np.ndarray, np.ndarray,
         rid: {"samples": st.samples, "flags": st.flags,
               "queue_wait_ticks": st.queue_wait_ticks,
               "prefill_chunks": st.prefill_chunks,
-              "decode_steps": st.decode_steps, "slot": st.slot}
+              "decode_steps": st.decode_steps, "slot": st.slot,
+              "priority": st.priority}
         for rid, st in ((rid, sched.telemetry(rid)) for rid in recs)}
     return {
         "backend": backend, "chunk_t": chunk_t,
@@ -141,6 +152,9 @@ def serve_streams(streams: Sequence[Tuple[str, np.ndarray, np.ndarray,
         "samples_per_s": total_samples / wall,
         "rejected_submits": agg["rejected_submits"],
         "chunk_latency": agg["chunk_latency"],
+        "short_ticks": agg["short_ticks"],
+        "programs": agg["programs"],
+        "classes": agg["classes"],
         "queue_wait_ticks_p50": float(np.percentile(waits, 50)),
         "queue_wait_ticks_p95": float(np.percentile(waits, 95)),
         "flagged": sorted(rid for rid in recs
@@ -270,7 +284,8 @@ def serve(cfg, batch: int, prompt_len: int, gen: int, m: float = 3.5,
 
 # ------------------------------------------------------------------- CLI
 def _demo_streams(n: int, history: int, live: int, seed: int = 0):
-    """Synthetic tenant mix: drifting means, one loud anomaly burst."""
+    """Synthetic tenant mix: drifting means, one loud anomaly burst,
+    every fourth tenant in the latency class (the rest are bulk)."""
     rng = np.random.default_rng(seed)
     out = []
     for i in range(n):
@@ -278,11 +293,12 @@ def _demo_streams(n: int, history: int, live: int, seed: int = 0):
         lv = rng.normal(loc=i * 0.1, size=(live,)).astype(np.float32)
         if live and i % 3 == 0:
             lv[live // 2] += 15.0  # anomaly burst mid-stream
-        out.append((f"tenant-{i}", h, lv, 2.0 + (i % 3)))
+        cls = "latency" if i % 4 == 0 else "bulk"
+        out.append((f"tenant-{i}", h, lv, 2.0 + (i % 3), cls))
     return out
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="lm", choices=["lm", "streams"])
     ap.add_argument("--arch", default="qwen2-7b")
@@ -296,7 +312,9 @@ def main():
     ap.add_argument("--history", type=int, default=256)
     ap.add_argument("--live", type=int, default=32)
     ap.add_argument("--arrivals-per-tick", type=int, default=None)
-    args = ap.parse_args()
+    ap.add_argument("--decode-t", type=int, default=1,
+                    help="short program length for decode-only ticks")
+    args = ap.parse_args(argv)
 
     fmt = None
     if args.backend == "pallas-q":
@@ -307,6 +325,8 @@ def main():
         res = serve_streams(
             _demo_streams(args.requests, args.history, args.live),
             backend=args.backend, chunk_t=args.chunk_t, fmt=fmt,
+            decode_t=args.decode_t,
+            class_weights={"latency": 4.0, "bulk": 1.0},
             arrivals_per_tick=args.arrivals_per_tick)
         lat = res["chunk_latency"]
         print(f"[serve] {res['requests']} requests, "
@@ -316,7 +336,12 @@ def main():
         print(f"[serve] chunk latency p50 {lat.get('p50_ms', 0):.2f}ms "
               f"p95 {lat.get('p95_ms', 0):.2f}ms, "
               f"queue wait p95 {res['queue_wait_ticks_p95']:.0f} ticks, "
-              f"{res['rejected_submits']} backpressured submits")
+              f"{res['rejected_submits']} backpressured submits, "
+              f"{res['short_ticks']} decode-short ticks")
+        for cls, c in sorted(res["classes"].items()):
+            print(f"[serve]   class {cls}: {c['completed']} done, "
+                  f"queue wait p95 "
+                  f"{c.get('queue_wait_ticks_p95', 0):.0f} ticks")
         print(f"[serve] flagged tenants: {res['flagged']}")
         return
 

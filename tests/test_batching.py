@@ -17,7 +17,8 @@ from conftest import given_or_cases
 
 from repro.engine import PoolFull, SlotPool, StreamEngine, list_backends
 from repro.fixedpoint import QFormat
-from repro.launch.batching import BatchingScheduler, Request
+from repro.launch.batching import (BatchingScheduler, EvictedRequest,
+                                   Request)
 
 FMT = QFormat(32, 20)
 
@@ -177,6 +178,271 @@ def test_results_and_feed_lifecycle_errors():
     sched.close("a")
     with pytest.raises(ValueError):
         sched.feed("a", [1.0])             # closed
+
+
+# ------------------------------------------------ async loop (ISSUE 5)
+def test_async_equals_sync_bit_exact():
+    """Acceptance (ISSUE 5): the async double-buffered loop is
+    bit-exact with the synchronous loop on the Q path — per-request
+    ecc/outlier identical across an interleaved priority mix, because
+    scheduling decisions depend only on host-side counters, never on
+    fetched verdicts."""
+    specs = _workload(5, seed=7)
+    prios = {rid: ("latency" if i % 2 else "bulk")
+             for i, rid in enumerate(specs)}
+
+    def run(measure_latency):
+        sched = _mk_sched("pallas-q", measure_latency=measure_latency,
+                          class_weights={"latency": 3.0, "bulk": 1.0})
+        order = list(specs)
+        fed = {rid: 0 for rid in specs}
+        closed = set()
+        for tick in range(500):
+            if tick < len(order):
+                rid = order[tick]
+                h, live, m = specs[rid]
+                assert sched.submit(
+                    Request(rid, h, m=m, priority=prios[rid]))
+                if not live.size:
+                    sched.close(rid)
+                    closed.add(rid)
+            for rid, (h, live, m) in specs.items():
+                if rid not in sched.stats_by_rid or rid in closed:
+                    continue
+                if fed[rid] < live.size:
+                    sched.feed(rid, live[fed[rid]:fed[rid] + 1])
+                    fed[rid] += 1
+                if fed[rid] == live.size:
+                    sched.close(rid)
+                    closed.add(rid)
+            sched.step()
+            if sched.completed == len(specs):
+                return sched
+        raise AssertionError("did not drain")
+
+    sync, asyn = run(True), run(False)
+    for rid in specs:
+        rs, ra = sync.results(rid), asyn.results(rid)
+        np.testing.assert_array_equal(rs["ecc"], ra["ecc"], err_msg=rid)
+        np.testing.assert_array_equal(rs["outlier"], ra["outlier"],
+                                      err_msg=rid)
+        ts, ta = sync.telemetry(rid), asyn.telemetry(rid)
+        assert (ts.samples, ts.flags) == (ta.samples, ta.flags)
+
+
+def test_adaptive_decode_short_program():
+    """Decode-only ticks ride the cached (decode_t, C) program instead
+    of the full (chunk_t, C) chunk, and the program cache stays flat
+    after warmup (no per-tick recompiles)."""
+    sched = _mk_sched("scan", chunk_t=8, decode_t=1)
+    h = np.random.default_rng(3).normal(size=(10,)).astype(np.float32)
+    sched.submit(Request("a", h))
+    sched.step()                           # prefill: avail 10 -> chunk
+    sched.step()                           # tail 2 > decode_t -> chunk
+    for i in range(5):                     # decode trickle: avail 1
+        sched.feed("a", [float(i)])
+        sched.step()
+    sched.close("a")
+    sched.drain()
+    log = list(sched.call_log)
+    assert [c["t"] for c in log] == [8, 8, 1, 1, 1, 1, 1]
+    assert [c["retired"] for c in log] == [8, 2, 1, 1, 1, 1, 1]
+    assert sched.short_ticks == 5
+    st = sched.stats()
+    # two cached programs at bucket 2, nothing else ever compiled
+    assert st["programs"] == [(2, 1), (2, 8)]
+    assert sched.telemetry("a").samples == 15
+
+
+def test_drain_open_request_raises_helpfully():
+    """Regression (ISSUE 5): drain with an open request must raise
+    immediately, naming the rids, not spin max_ticks times."""
+    sched = _mk_sched("scan")
+    h = np.zeros((6,), np.float32)
+    sched.submit(Request("open-a", h))
+    with pytest.raises(RuntimeError, match=r"open-a.*close\(\)"):
+        sched.drain()
+    assert sched.tick_no < 10              # stalled detection, not 100k
+
+
+def test_admission_during_pool_resize_tick():
+    """A request admitted in a tick where the pool grows a bucket —
+    while the previous tick's call is still in flight — is served
+    bit-exactly (Q path): the in-flight outputs keep their dispatch-
+    time slot indices and the re-padded state is exact."""
+    rng = np.random.default_rng(9)
+    hs = {f"r{i}": rng.normal(size=(12,)).astype(np.float32)
+          for i in range(3)}
+    sched = _mk_sched("pallas-q", buckets=(2, 4), chunk_t=4)
+    sched.submit(Request("r0", hs["r0"]))
+    sched.submit(Request("r1", hs["r1"]))
+    sched.step()                           # bucket 2, call in flight
+    sched.submit(Request("r2", hs["r2"]))
+    sched.step()                           # grows 2 -> 4 mid-tick
+    assert sched.pool.stats()["resizes"] == 1
+    for rid in hs:
+        sched.close(rid)
+    sched.drain()
+    for rid, h in hs.items():
+        oracle = StreamEngine(1, "pallas-q", fmt=FMT, block_t=8)
+        ref = oracle.process(h[:, None])
+        res = sched.results(rid)
+        np.testing.assert_array_equal(
+            res["ecc"], np.asarray(ref["ecc"])[:, 0], err_msg=rid)
+        np.testing.assert_array_equal(
+            res["outlier"], np.asarray(ref["outlier"])[:, 0],
+            err_msg=rid)
+
+
+# ------------------------------------- priority admission (ISSUE 5)
+def test_priority_weighted_admission_no_starvation():
+    """A burst of bulk prefills cannot starve the latency class: the
+    weighted-deficit queues admit latency tenants ahead of the bulk
+    backlog."""
+    sched = _mk_sched("scan", buckets=(2,), queue_limit=16,
+                      class_weights={"bulk": 1.0, "latency": 3.0})
+    h = np.zeros((4,), np.float32)
+    for i in range(6):
+        assert sched.submit(Request(f"b{i}", h, priority="bulk"))
+        sched.close(f"b{i}")
+    for i in range(2):
+        assert sched.submit(Request(f"l{i}", h, priority="latency"))
+        sched.close(f"l{i}")
+    sched.drain()
+    adm = {rid: sched.telemetry(rid).admitted_tick
+           for rid in list(sched.stats_by_rid)}
+    # latency submitted last but admitted within the first two ticks;
+    # the bulk backlog tail waits behind them
+    assert max(adm["l0"], adm["l1"]) <= 2
+    assert max(adm[f"b{i}"] for i in range(6)) > 2
+    classes = sched.stats()["classes"]
+    assert classes["latency"]["completed"] == 2
+    assert classes["bulk"]["completed"] == 6
+    assert (classes["latency"]["queue_wait_ticks_p95"]
+            <= classes["bulk"]["queue_wait_ticks_p95"])
+
+
+def test_per_class_state_is_pruned_when_drained():
+    """A forever-running gateway must not accumulate per-class state
+    for every priority string ever seen: drained classes are pruned
+    (ctor-declared weights are the one retained configuration)."""
+    sched = _mk_sched("scan", class_weights={"latency": 2.0})
+    for i in range(8):
+        sched.submit(Request(f"r{i}", np.zeros((2,), np.float32),
+                             priority=f"tenant-{i}"))  # unique classes
+        sched.close(f"r{i}")
+    sched.drain()
+    assert sched.completed == 8
+    assert not sched._queues and not sched._deficit
+    assert set(sched._weights) == {"latency"}   # ctor config retained
+
+
+def test_evicted_ring_survives_resubmit_cycle():
+    """A rid that is evicted twice (resubmit cycle) must still report
+    EvictedRequest after its *stale* ring entry rotates out — the ring
+    is refcounted, not a set."""
+    from collections import deque as _deque
+    sched = _mk_sched("scan", keep_finished=1)
+    sched._evicted = _deque(maxlen=2)           # tiny ring for rotation
+    sched._note_evicted("a")                    # first eviction
+    sched._note_evicted("a")                    # evicted again (reuse)
+    sched._note_evicted("b")                    # rotates the stale "a"
+    assert list(sched._evicted) == ["a", "b"]
+    with pytest.raises(EvictedRequest):         # newer "a" entry lives
+        sched.results("a")
+    sched._note_evicted("c")                    # rotates the live "a"
+    with pytest.raises(KeyError) as ei:
+        sched.results("a")                      # now genuinely unknown
+    assert not isinstance(ei.value, EvictedRequest)
+
+
+# -------------------------------------- lifecycle telemetry (ISSUE 5)
+def test_phase_transitions_prefill_to_decode():
+    """Regression (ISSUE 5): `phase` must leave PREFILL once the
+    history cursor passes the replayed prefix (it used to stay PREFILL
+    for the whole decode phase)."""
+    sched = _mk_sched("scan", chunk_t=8)
+    h = np.zeros((10,), np.float32)
+    sched.submit(Request("a", h))
+    assert sched.request_phase("a") == "queued"
+    sched.step()                           # consumed 8 < 10
+    assert sched.request_phase("a") == "prefill"
+    sched.step()                           # consumed 10 >= 10
+    assert sched.request_phase("a") == "decode"
+    sched.feed("a", [1.0])
+    sched.step()
+    assert sched.request_phase("a") == "decode"
+    sched.close("a")
+    sched.drain()
+    assert sched.request_phase("a") == "done"
+    with pytest.raises(KeyError):
+        sched.request_phase("ghost")
+
+
+def test_empty_history_starts_in_decode():
+    sched = _mk_sched("scan")
+    sched.submit(Request("d"))
+    sched.step()
+    assert sched.request_phase("d") == "decode"
+    sched.close("d")
+    sched.drain()
+
+
+def test_evicted_rid_error_is_distinct():
+    """Regression (ISSUE 5): results()/telemetry() on a request evicted
+    by the keep_finished cap must raise a distinct error, not the same
+    bare KeyError as a never-submitted rid."""
+    sched = _mk_sched("scan", keep_finished=2)
+    for i in range(5):
+        sched.submit(Request(f"r{i}", np.zeros((2,), np.float32)))
+        sched.close(f"r{i}")
+    sched.drain()
+    for fn in (sched.results, sched.telemetry, sched.request_phase):
+        with pytest.raises(EvictedRequest, match="keep_finished=2"):
+            fn("r0")
+        with pytest.raises(KeyError) as ei:
+            fn("never-submitted")
+        assert not isinstance(ei.value, EvictedRequest)
+        assert "unknown" in str(ei.value)
+    assert isinstance(EvictedRequest("x"), KeyError)  # except-compat
+    sched.results("r4")                    # retained rids still resolve
+
+
+def test_latency_log_pairs_and_cap():
+    """Regression (ISSUE 5): the per-request latency log records
+    (wall, retired_this_call) pairs — the shared fused-call wall is no
+    longer attributed wholesale to every member — and its cap is the
+    `latency_log_len` ctor knob, not a hard-coded 4096."""
+    sched = _mk_sched("scan", chunk_t=4, latency_log_len=3,
+                      measure_latency=True)
+    sched.submit(Request("a", np.zeros((18,), np.float32)))
+    sched.close("a")
+    sched.drain()                          # 5 calls: 4,4,4,4,2
+    st = sched.telemetry("a")
+    assert st.samples == 18
+    assert len(st.chunk_latency_s) == 3    # capped by the ctor knob
+    for wall, retired in st.chunk_latency_s:
+        assert wall > 0 and retired == 4   # honest per-call weights
+
+
+def test_feed_after_close_on_queued_request():
+    """Edge (ISSUE 5): a request closed while still *queued* (pool
+    full, never admitted) must reject feed the same way a running
+    closed request does."""
+    sched = _mk_sched("scan", buckets=(2,), queue_limit=4)
+    for i in range(2):                     # occupy the whole pool
+        sched.submit(Request(f"hold{i}", np.zeros((2,), np.float32)))
+    sched.step()
+    sched.submit(Request("q", np.zeros((2,), np.float32)))
+    sched.step()                           # pool full: "q" stays queued
+    assert sched.request_phase("q") == "queued"
+    sched.close("q")
+    with pytest.raises(ValueError, match="closed"):
+        sched.feed("q", [1.0])
+    for i in range(2):
+        sched.close(f"hold{i}")
+    sched.drain()
+    assert sched.completed == 3            # q admitted after a release
 
 
 # --------------------------------------------------- autoscaling pool
