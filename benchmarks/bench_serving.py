@@ -27,10 +27,16 @@ Three load shapes per backend x offered load:
     The row's `short_ticks` counts those; `samples_per_s` on this row
     is what the CI regression gate guards for the fast path.
 
-Emits a JSON table (one row per backend x offered load x shape):
+Emits a JSON table (one row per backend x offered load x shape); each
+row embeds a `metrics` summary of the run's `repro.obs` registry
+snapshot (counters/gauges verbatim, histograms as count/sum/p50/p95)
+— the evidence trail `check_regression.py --explain` cites.  With
+`--trace PATH` every run records into one shared `TickTracer` and the
+Chrome trace-event JSON lands at PATH (open in Perfetto / about:tracing).
 
     PYTHONPATH=src python benchmarks/bench_serving.py
-    PYTHONPATH=src python benchmarks/bench_serving.py --smoke   # CI: tiny
+    PYTHONPATH=src python benchmarks/bench_serving.py --smoke \
+        --trace trace.json                               # CI: tiny
 """
 from __future__ import annotations
 
@@ -42,9 +48,27 @@ import numpy as np
 from repro.engine import list_backends
 from repro.fixedpoint import QFormat
 from repro.launch.serve import serve_streams
+from repro.obs import TickTracer
 
 
 CLASS_WEIGHTS = {"latency": 4.0, "bulk": 1.0}
+
+
+def summarize_snapshot(snap: dict) -> dict:
+    """Compact a registry snapshot for embedding in a bench row:
+    counters/gauges keep every series, histograms drop the bucket
+    vectors (count/sum/p50/p95 stay)."""
+    out = {}
+    for name, fam in snap.items():
+        samples = []
+        for s in fam["samples"]:
+            if fam["type"] == "histogram":
+                samples.append({k: s[k] for k in
+                                ("labels", "count", "sum", "p50", "p95")})
+            else:
+                samples.append(s)
+        out[name] = {"type": fam["type"], "samples": samples}
+    return out
 
 
 def make_streams(n: int, history: int, live: int, seed: int = 0,
@@ -79,7 +103,8 @@ def make_streams(n: int, history: int, live: int, seed: int = 0,
 def bench_one(backend: str, offered_load: int, *, n_requests: int,
               history: int, live: int, chunk_t: int, decode_t: int,
               buckets, queue_limit: int, fmt: QFormat, interpret,
-              shape: str = "uniform", reps: int = 2) -> dict:
+              shape: str = "uniform", reps: int = 2,
+              tracer=None) -> dict:
     # each rep builds a fresh scheduler (compiles included); report the
     # best rep so the row reflects the machine, not one-off jitter
     runs = [serve_streams(
@@ -87,7 +112,8 @@ def bench_one(backend: str, offered_load: int, *, n_requests: int,
         backend=backend, buckets=buckets, chunk_t=chunk_t,
         decode_t=decode_t, fmt=fmt, interpret=interpret,
         queue_limit=queue_limit, class_weights=dict(CLASS_WEIGHTS),
-        arrivals_per_tick=offered_load, measure_latency=True)
+        arrivals_per_tick=offered_load, measure_latency=True,
+        tracer=tracer)
         for _ in range(reps)]
     res = max(runs, key=lambda r: r["samples_per_s"])
     lat = res["chunk_latency"]
@@ -116,12 +142,13 @@ def bench_one(backend: str, offered_load: int, *, n_requests: int,
         "classes": classes,
         "pool_resizes": res["pool"]["resizes"],
         "flagged": len(res["flagged"]),
+        "metrics": summarize_snapshot(res["metrics"]),
     }
 
 
 def run(backends, loads, *, n_requests, history, live, chunk_t, buckets,
         queue_limit, decode_t=1, wl=32, fl=20, interpret=None, reps=2,
-        shapes=("uniform", "mixed", "decode")):
+        shapes=("uniform", "mixed", "decode"), tracer=None):
     fmt = QFormat(wl, fl)
     rows = []
     for backend in backends:
@@ -132,7 +159,8 @@ def run(backends, loads, *, n_requests, history, live, chunk_t, buckets,
                     history=history, live=live, chunk_t=chunk_t,
                     decode_t=decode_t, buckets=buckets,
                     queue_limit=queue_limit, fmt=fmt,
-                    interpret=interpret, shape=shape, reps=reps))
+                    interpret=interpret, shape=shape, reps=reps,
+                    tracer=tracer))
     return rows
 
 
@@ -155,6 +183,9 @@ def main(argv=None):
     ap.add_argument("--wl", type=int, default=32)
     ap.add_argument("--fl", type=int, default=20)
     ap.add_argument("--out", default=None, help="write JSON here")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record every run into one TickTracer and "
+                         "dump Chrome trace-event JSON here")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes + interpret mode (CI perf gate)")
     args = ap.parse_args(argv)
@@ -174,11 +205,13 @@ def main(argv=None):
         queue_limit = args.queue_limit
         interpret = None
     backends = [b for b in args.backends.split(",") if b]
+    tracer = TickTracer() if args.trace else None
 
     rows = run(backends, loads, n_requests=n_requests, history=history,
                live=live, chunk_t=chunk_t, decode_t=decode_t,
                buckets=buckets, queue_limit=queue_limit, wl=args.wl,
-               fl=args.fl, interpret=interpret, shapes=shapes)
+               fl=args.fl, interpret=interpret, shapes=shapes,
+               tracer=tracer)
     doc = {"bench": "serving_throughput", "smoke": bool(args.smoke),
            "rows": rows}
     text = json.dumps(doc, indent=2)
@@ -186,6 +219,10 @@ def main(argv=None):
     if args.out:
         with open(args.out, "w") as f:
             f.write(text + "\n")
+    if tracer is not None:
+        tracer.dump(args.trace)
+        print(f"[bench_serving] wrote {len(tracer)} trace events "
+              f"({tracer.dropped} dropped) to {args.trace}")
     return doc
 
 

@@ -12,7 +12,14 @@ is itself a failure (exit 2): an empty rows list must never read as
 
     PYTHONPATH=src python benchmarks/run.py --only engine  --smoke --out-dir out
     PYTHONPATH=src python benchmarks/run.py --only serving --smoke --out-dir out
-    python benchmarks/check_regression.py --current out
+    python benchmarks/check_regression.py --current out \
+        --explain out/regression_report.md
+
+`--explain PATH` writes a markdown evidence report — one table per
+bench file (configuration | baseline | current | ratio | verdict)
+plus, per row, the `repro.obs` metrics summary the current run
+embedded — written on the pass path too, so every CI run leaves an
+auditable artifact, not just the red ones.
 
 Refresh the committed baselines after an intentional perf change with
 `--update` (runs the same validation, then copies current -> baselines).
@@ -92,8 +99,72 @@ def compare(baseline_path: pathlib.Path, current_path: pathlib.Path,
         ratio = c[METRIC] / b[METRIC]
         results.append({
             "id": dict(rid), "baseline": b[METRIC], "current": c[METRIC],
-            "ratio": ratio, "ok": ratio >= 1.0 - threshold})
+            "ratio": ratio, "ok": ratio >= 1.0 - threshold,
+            "metrics": c.get("metrics")})
     return results
+
+
+# ------------------------------------------------------ evidence report
+def _ident_str(ident: dict) -> str:
+    return ", ".join(f"{k}={v}" for k, v in ident.items()
+                     if k != "bench")
+
+
+def _metrics_lines(snap: dict) -> list:
+    """Flatten an embedded metrics summary into exposition-ish lines."""
+    lines = []
+    for name in sorted(snap):
+        fam = snap[name]
+        for s in fam.get("samples", []):
+            lbl = ",".join(f'{k}="{v}"' for k, v in
+                           sorted(s.get("labels", {}).items()))
+            sfx = f"{{{lbl}}}" if lbl else ""
+            if fam.get("type") == "histogram":
+                lines.append(
+                    f"{name}{sfx} count={s['count']:g} sum={s['sum']:.6g}"
+                    f" p50={s['p50']:.6g} p95={s['p95']:.6g}")
+            else:
+                lines.append(f"{name}{sfx} {s['value']:g}")
+    return lines
+
+
+def write_explain(path, sections, threshold: float) -> None:
+    """Markdown evidence report: per-row baseline-vs-current verdicts
+    plus each current row's embedded `repro.obs` metrics summary."""
+    any_rows = any(s["results"] for s in sections)
+    failed = (any(s["error"] for s in sections)
+              or any(not r["ok"] for s in sections for r in s["results"]))
+    lines = [
+        "# Perf-regression gate evidence",
+        "",
+        f"- metric: `{METRIC}` (higher is better)",
+        f"- gate: current/baseline ratio >= {1.0 - threshold:.2f}",
+        f"- verdict: **{'FAIL' if failed or not any_rows else 'PASS'}**",
+        "",
+    ]
+    for sec in sections:
+        lines += [f"## {sec['name']}", ""]
+        if sec["error"]:
+            lines += [f"**MALFORMED / MISSING:** {sec['error']}", ""]
+            continue
+        lines += ["| configuration | baseline | current | ratio "
+                  "| verdict |",
+                  "|---|---:|---:|---:|---|"]
+        for r in sec["results"]:
+            verdict = "ok" if r["ok"] else "**FAIL**"
+            lines.append(
+                f"| {_ident_str(r['id'])} | {r['baseline']:.1f} "
+                f"| {r['current']:.1f} | {r['ratio']:.3f} | {verdict} |")
+        lines.append("")
+        for r in sec["results"]:
+            if not r.get("metrics"):
+                continue
+            lines += [f"<details><summary>metrics evidence: "
+                      f"{_ident_str(r['id'])}</summary>", "", "```"]
+            lines += _metrics_lines(r["metrics"])
+            lines += ["```", "", "</details>", ""]
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
 
 
 def main(argv=None) -> int:
@@ -106,6 +177,9 @@ def main(argv=None) -> int:
                     help="max allowed fractional samples/s regression")
     ap.add_argument("--update", action="store_true",
                     help="validate, then copy current over the baselines")
+    ap.add_argument("--explain", default=None, metavar="PATH",
+                    help="write a markdown evidence report here "
+                         "(written on pass and fail alike)")
     args = ap.parse_args(argv)
 
     bdir = pathlib.Path(args.baselines)
@@ -123,21 +197,41 @@ def main(argv=None) -> int:
             print(f"[regression] updated {bpath} from {cpath}")
         return 0
 
-    failed = False
+    failed, malformed = False, None
+    sections = []
     for bpath in baselines:
         cpath = cdir / bpath.name
         if not cpath.exists():
             print(f"[regression] FAIL {bpath.name}: {cpath} not produced",
                   file=sys.stderr)
             failed = True
+            sections.append({"name": bpath.name,
+                             "error": f"{cpath} not produced",
+                             "results": []})
             continue
-        for res in compare(bpath, cpath, args.threshold):
+        try:
+            results = compare(bpath, cpath, args.threshold)
+        except MalformedBench as e:
+            if args.explain is None:
+                raise
+            malformed = malformed or e
+            sections.append({"name": bpath.name, "error": str(e),
+                             "results": []})
+            continue
+        sections.append({"name": bpath.name, "error": None,
+                         "results": results})
+        for res in results:
             tag = "ok  " if res["ok"] else "FAIL"
             ident = {k: v for k, v in res["id"].items() if k != "bench"}
             print(f"[regression] {tag} {bpath.name} {ident}: "
                   f"{res['current']:.0f} vs baseline {res['baseline']:.0f} "
                   f"samples/s (x{res['ratio']:.2f})")
             failed = failed or not res["ok"]
+    if args.explain:
+        write_explain(args.explain, sections, args.threshold)
+        print(f"[regression] evidence report: {args.explain}")
+    if malformed is not None:
+        raise malformed
     if failed:
         print(f"[regression] FAILED: >{args.threshold:.0%} samples/s "
               "regression (or missing rows); if intentional, refresh "

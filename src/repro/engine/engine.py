@@ -32,6 +32,7 @@ from repro.engine.backends import get_backend
 from repro.engine.state import (EngineState, engine_attach, engine_detach,
                                 engine_init, engine_process, engine_reset,
                                 slot_mask)
+from repro.obs import NULL_TRACER, MetricsRegistry, auto_name
 
 __all__ = ["StreamEngine"]
 
@@ -53,9 +54,34 @@ class StreamEngine:
                  m: float = 3.0, fmt=None, block_t: int = 256,
                  interpret: Optional[bool] = None, lane_pad: int = 128,
                  mesh=None, axis_name: str = "data",
-                 auto_attach: bool = True):
+                 auto_attach: bool = True, registry=None, tracer=None,
+                 name: Optional[str] = None):
         self.capacity = int(capacity)
         self.default_m = float(m)
+        # observability (repro.obs): process-call / samples-retired /
+        # program-compile counters, labelled by engine instance; the
+        # tracer records a compile instant when a new (capacity, T)
+        # program shape is first executed
+        self.registry = (MetricsRegistry() if registry is None
+                         else registry)
+        self.tracer = NULL_TRACER if tracer is None else tracer
+        self.name = auto_name("engine") if name is None else str(name)
+        lbl = {"engine": self.name}
+        self._c_calls = self.registry.counter(
+            "engine_process_calls_total",
+            "process() chunk calls", ("engine",)).labels(**lbl)
+        self._c_samples = self.registry.counter(
+            "engine_samples_retired_total",
+            "samples retired across all slots (per the caller's "
+            "valid_lens)", ("engine",)).labels(**lbl)
+        self._c_programs = self.registry.counter(
+            "engine_programs_compiled_total",
+            "distinct (capacity, T) program shapes executed",
+            ("engine",)).labels(**lbl)
+        # host mirror of the active-slot count, keyed by the identity
+        # of state.active (replaced by attach/detach/reset/resize):
+        # metrics never force an extra device fetch per call
+        self._active_cache = (None, 0)
         self.backend = get_backend(backend, m=m, fmt=fmt, block_t=block_t,
                                    interpret=interpret, lane_pad=lane_pad)
         self.state = engine_init(self.capacity, self.backend.state_dtype,
@@ -154,6 +180,44 @@ class StreamEngine:
         self._m[idx] = m
 
     # ------------------------------------------------------ processing
+    def _active_mask_host(self) -> np.ndarray:
+        """Host copy of the active mask, cached by the identity of
+        `state.active` (which only attach/detach/reset/resize replace)
+        so per-call metrics never add a device fetch to the hot path."""
+        arr = self.state.active
+        if self._active_cache[0] is not arr:
+            self._active_cache = (arr, np.asarray(arr))
+        return self._active_cache[1]
+
+    def _account(self, t_len: int, vc, had_vlens: bool, active) -> None:
+        """Update the obs instruments for one `process` call.
+
+        `vc` is the concrete valid_lens (None when traced under an
+        outer jit — the retired count is then unknowable on host and
+        skipped; calls/programs still count).
+        """
+        t_key = int(t_len)
+        if t_key not in self._t_shapes:
+            self._t_shapes.add(t_key)
+            self._c_programs.inc()
+            if self.tracer.enabled:
+                self.tracer.instant("engine.compile", engine=self.name,
+                                    capacity=self.capacity, t=t_key)
+        self._c_calls.inc()
+        if had_vlens and vc is None:
+            return
+        amask = self._active_mask_host()
+        if active is not None:
+            amask = amask & np.asarray(slot_mask(active, self.capacity))
+        if not had_vlens:
+            retired = t_key * int(amask.sum())
+        elif vc.ndim == 0:
+            retired = int(vc) * int(amask.sum())
+        else:
+            retired = int(vc[amask].sum())
+        if retired:
+            self._c_samples.inc(retired)
+
     def process(self, x: jnp.ndarray, active=None,
                 valid_lens=None) -> dict:
         """Feed one (T, capacity) chunk; returns per-sample verdicts.
@@ -184,6 +248,7 @@ class StreamEngine:
         st = self.state
         part = st.active if active is None else jnp.logical_and(
             st.active, slot_mask(active, self.capacity))
+        vc = None
         if valid_lens is None:
             vl = jnp.full((self.capacity,), t_len, jnp.int32)
         else:
@@ -211,7 +276,7 @@ class StreamEngine:
         mv = self._m
         if self._mesh is None and (mv == mv[0]).all():
             mv = mv[0]
-        self._t_shapes.add(int(t_len))
+        self._account(t_len, vc, valid_lens is not None, active)
         (k, mean, var), (ecc, outlier) = self._fn(
             x, st.k, st.mean, st.var, vl,
             jnp.asarray(self.backend.quantize_m(mv)))

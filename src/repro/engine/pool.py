@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.engine.engine import StreamEngine
 from repro.engine.state import EngineState
+from repro.obs import NULL_TRACER, MetricsRegistry, auto_name
 
 __all__ = ["SlotPool", "PoolFull"]
 
@@ -51,7 +52,8 @@ class SlotPool:
 
     def __init__(self, backend: str = "scan", *,
                  buckets: Tuple[int, ...] = (8, 16, 32, 64),
-                 m: float = 3.0, **engine_opts):
+                 m: float = 3.0, registry=None, tracer=None,
+                 name: Optional[str] = None, **engine_opts):
         if not buckets or any(b <= 0 for b in buckets):
             raise ValueError(f"buckets must be positive: {buckets}")
         self.buckets = tuple(sorted(set(int(b) for b in buckets)))
@@ -60,14 +62,42 @@ class SlotPool:
         self._opts = dict(engine_opts, m=m)
         self._engines: dict[int, StreamEngine] = {}
         self._bucket = self.buckets[0]
-        self.resizes = 0  # grow+shrink count (telemetry)
+        # observability (repro.obs): the registry/tracer are shared
+        # with every per-bucket engine (engine series are labelled
+        # `<pool>/capN`), so one snapshot covers the whole pool
+        self.registry = (MetricsRegistry() if registry is None
+                         else registry)
+        self.tracer = NULL_TRACER if tracer is None else tracer
+        self.name = auto_name("pool") if name is None else str(name)
+        lbl = {"pool": self.name}
+        self._g_occupancy = self.registry.gauge(
+            "pool_occupancy", "attached tenant slots",
+            ("pool",)).labels(**lbl)
+        self._g_capacity = self.registry.gauge(
+            "pool_capacity", "current bucket capacity",
+            ("pool",)).labels(**lbl)
+        self._g_capacity.set(self._bucket)
+        self._c_grows = self.registry.counter(
+            "pool_grows_total", "bucket grow transitions",
+            ("pool",)).labels(**lbl)
+        self._c_shrinks = self.registry.counter(
+            "pool_shrinks_total", "bucket shrink transitions",
+            ("pool",)).labels(**lbl)
+        self._c_full = self.registry.counter(
+            "pool_full_total",
+            "PoolFull backpressure raises (acquire beyond top bucket)",
+            ("pool",)).labels(**lbl)
 
     # ------------------------------------------------------- engines
     def _engine_for(self, bucket: int) -> StreamEngine:
         eng = self._engines.get(bucket)
         if eng is None:
             eng = StreamEngine(bucket, self.backend_name,
-                               auto_attach=False, **self._opts)
+                               auto_attach=False,
+                               registry=self.registry,
+                               tracer=self.tracer,
+                               name=f"{self.name}/cap{bucket}",
+                               **self._opts)
             self._engines[bucket] = eng
         return eng
 
@@ -83,6 +113,11 @@ class SlotPool:
     @property
     def max_capacity(self) -> int:
         return self.buckets[-1]
+
+    @property
+    def resizes(self) -> int:
+        """Grow + shrink transitions (read from the obs registry)."""
+        return int(self._c_grows.value + self._c_shrinks.value)
 
     @property
     def occupancy(self) -> int:
@@ -118,8 +153,13 @@ class SlotPool:
             k=jnp.zeros_like(st.k), mean=jnp.zeros_like(st.mean),
             var=jnp.zeros_like(st.var),
             active=jnp.zeros_like(st.active))
+        (self._c_grows if bucket > self._bucket
+         else self._c_shrinks).inc()
+        if self.tracer.enabled:
+            self.tracer.instant("pool.resize", pool=self.name,
+                                frm=self._bucket, to=bucket)
         self._bucket = bucket
-        self.resizes += 1
+        self._g_capacity.set(bucket)
 
     def _bucket_holding(self, n_slots: int, max_idx: int) -> Optional[int]:
         """Smallest bucket with room for `n_slots` keeping index
@@ -144,18 +184,22 @@ class SlotPool:
             max_idx = int(np.flatnonzero(act).max()) if act.any() else -1
             target = self._bucket_holding(need, max_idx)
             if target is None:
+                self._c_full.inc()
                 raise PoolFull(
                     f"pool full: want {n} more slots with "
                     f"{int(act.sum())}/{self.max_capacity} active at the "
                     f"top bucket", int(act.sum()), self.max_capacity)
             self._resize(target)
-        return self.engine.attach(n=n, m=m)
+        idx = self.engine.attach(n=n, m=m)
+        self._g_occupancy.set(need)
+        return idx
 
     def release(self, slots) -> None:
         """Detach tenants; shrink to the smallest bucket that still
         addresses every remaining active slot."""
         self.engine.detach(slots)
         act = np.asarray(self.engine.state.active)
+        self._g_occupancy.set(int(act.sum()))
         max_idx = int(np.flatnonzero(act).max()) if act.any() else -1
         target = self._bucket_holding(int(act.sum()), max_idx)
         if target is not None and target < self._bucket:

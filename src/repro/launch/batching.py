@@ -69,6 +69,8 @@ import jax
 import numpy as np
 
 from repro.engine import PoolFull, SlotPool
+from repro.obs import (EventBus, LATENCY_MS_BUCKETS, MetricsRegistry,
+                       NULL_TRACER, TICK_BUCKETS, auto_name)
 
 __all__ = ["Request", "RequestStats", "BatchingScheduler",
            "EvictedRequest"]
@@ -215,6 +217,8 @@ class BatchingScheduler:
                  call_log_len: int = 4096,
                  latency_log_len: int = 4096,
                  class_weights: Optional[Dict[str, float]] = None,
+                 registry=None, tracer=None,
+                 name: Optional[str] = None,
                  **engine_opts):
         if chunk_t < 2:
             raise ValueError("chunk_t must be >= 2")
@@ -222,11 +226,23 @@ class BatchingScheduler:
             raise ValueError(
                 f"decode_t must lie in [1, chunk_t={chunk_t}], "
                 f"got {decode_t}")
+        # observability (repro.obs): the scheduler's hand-rolled
+        # counters live in registry instruments now — `stats()` reads
+        # them back, the tracer records tick spans, the event bus
+        # streams verdicts at retirement (`subscribe()`)
+        self.registry = (MetricsRegistry() if registry is None
+                         else registry)
+        self.tracer = NULL_TRACER if tracer is None else tracer
+        self.name = auto_name("sched") if name is None else str(name)
+        self.events = EventBus()
+        self._init_instruments()
         # decode-only ticks retire 1 sample/slot of the (decode_t, C)
         # program: a small block keeps the padded time extent (and
         # interpret-mode cost) proportionate
         engine_opts.setdefault("block_t", 8)
-        self.pool = SlotPool(backend, buckets=buckets, m=m, **engine_opts)
+        self.pool = SlotPool(backend, buckets=buckets, m=m,
+                             registry=self.registry, tracer=self.tracer,
+                             name=f"{self.name}/pool", **engine_opts)
         self.chunk_t = int(chunk_t)
         self.decode_t = int(decode_t)
         self.queue_limit = int(queue_limit)
@@ -256,13 +272,105 @@ class BatchingScheduler:
         # resubmit cycle, so membership is refcounted, not a set)
         self._evicted_counts: Dict[str, int] = {}
         self.stats_by_rid: Dict[str, RequestStats] = {}
-        self.tick_no = 0
-        self.rejected = 0
-        self.completed = 0
-        self.short_ticks = 0  # ticks that rode the (decode_t, C) program
         self.call_log: deque = deque(maxlen=int(call_log_len))
         self._inflight: deque = deque()   # dispatched, not host-fetched
         self._deferred_flagged: List[str] = []
+
+    def _init_instruments(self) -> None:
+        """Create the scheduler's registry instruments (the counters
+        `tick_no`/`completed`/`rejected`/`short_ticks` read back as
+        properties, plus the running latency/wait histograms that make
+        `stats()` an O(1) snapshot)."""
+        reg, lbl = self.registry, {"sched": self.name}
+        self._c_ticks = reg.counter(
+            "sched_ticks_total", "scheduler ticks",
+            ("sched",)).labels(**lbl)
+        self._c_short = reg.counter(
+            "sched_short_ticks_total",
+            "ticks that rode the short (decode_t, C) program",
+            ("sched",)).labels(**lbl)
+        self._c_completed = reg.counter(
+            "sched_completed_total", "requests completed",
+            ("sched",)).labels(**lbl)
+        self._c_rejected = reg.counter(
+            "sched_rejected_submits_total",
+            "submits rejected by the bounded admission queue",
+            ("sched",)).labels(**lbl)
+        self._c_submitted = reg.counter(
+            "sched_submitted_total", "requests accepted into a queue",
+            ("sched",)).labels(**lbl)
+        self._c_calls = reg.counter(
+            "sched_calls_total", "fused engine calls dispatched",
+            ("sched",)).labels(**lbl)
+        self._c_samples = reg.counter(
+            "sched_samples_retired_total",
+            "samples retired across all requests",
+            ("sched",)).labels(**lbl)
+        self._c_flags = reg.counter(
+            "sched_flags_total", "outlier verdicts raised",
+            ("sched",)).labels(**lbl)
+        self._g_inflight = reg.gauge(
+            "sched_inflight_calls",
+            "dispatched fused calls not yet host-fetched",
+            ("sched",)).labels(**lbl)
+        self._h_wall = reg.histogram(
+            "sched_call_wall_ms",
+            "fused-call wall time, weighted by samples retired",
+            ("sched",), buckets=LATENCY_MS_BUCKETS).labels(**lbl)
+        # per-class families: children created lazily per priority
+        self._f_queued = reg.gauge(
+            "sched_class_queued", "requests waiting for admission",
+            ("sched", "class"))
+        self._f_running = reg.gauge(
+            "sched_class_running", "admitted, not yet completed",
+            ("sched", "class"))
+        self._f_cls_done = reg.counter(
+            "sched_class_completed_total", "completions per class",
+            ("sched", "class"))
+        self._f_wait = reg.histogram(
+            "sched_queue_wait_ticks", "submit-to-admission wait",
+            ("sched", "class"), buckets=TICK_BUCKETS)
+        self._f_latency = reg.histogram(
+            "sched_request_latency_ticks", "submit-to-done latency",
+            ("sched", "class"), buckets=TICK_BUCKETS)
+        self._classes: Dict[str, dict] = {}
+
+    def _cls(self, cls: str) -> dict:
+        """The cached per-class instrument children for one priority."""
+        ch = self._classes.get(cls)
+        if ch is None:
+            lbl = {"sched": self.name, "class": cls}
+            ch = {"queued": self._f_queued.labels(**lbl),
+                  "running": self._f_running.labels(**lbl),
+                  "completed": self._f_cls_done.labels(**lbl),
+                  "wait": self._f_wait.labels(**lbl),
+                  "latency": self._f_latency.labels(**lbl)}
+            self._classes[cls] = ch
+        return ch
+
+    # ------------------------------------------- registry-backed counts
+    @property
+    def tick_no(self) -> int:
+        return int(self._c_ticks.value)
+
+    @property
+    def completed(self) -> int:
+        return int(self._c_completed.value)
+
+    @property
+    def rejected(self) -> int:
+        return int(self._c_rejected.value)
+
+    @property
+    def short_ticks(self) -> int:
+        """Ticks that rode the (decode_t, C) program."""
+        return int(self._c_short.value)
+
+    def subscribe(self, maxlen: int = 4096):
+        """A `Subscription` streaming this scheduler's events
+        (admitted / chunk_retired / done / evicted) as they flush —
+        verdicts at retirement, not completion.  See `repro.obs.events`."""
+        return self.events.subscribe(maxlen=maxlen)
 
     # --------------------------------------------------------- intake
     @property
@@ -281,7 +389,7 @@ class BatchingScheduler:
         if req.rid in self.stats_by_rid:
             raise ValueError(f"duplicate request id {req.rid!r}")
         if self.queued_total >= self.queue_limit:
-            self.rejected += 1
+            self._c_rejected.inc()
             return False
         # rid is reusable post-evict (stale ring entries age out inert)
         self._evicted_counts.pop(req.rid, None)
@@ -293,6 +401,8 @@ class BatchingScheduler:
             rid=req.rid, submitted_tick=self.tick_no,
             priority=req.priority)
         self._queues.setdefault(req.priority, deque()).append(req)
+        self._c_submitted.inc()
+        self._cls(req.priority)["queued"].inc()
         return True
 
     def feed(self, rid: str, samples) -> None:
@@ -367,6 +477,17 @@ class BatchingScheduler:
                     st.slot = slot
                     self.runs[req.rid] = _Run(req, slot, st)
                     events["admitted"].append(req.rid)
+                    ch = self._cls(req.priority)
+                    ch["queued"].dec()
+                    ch["running"].inc()
+                    ch["wait"].observe(st.queue_wait_ticks)
+                    if self.tracer.enabled:
+                        self.tracer.instant(
+                            "admit", tick=self.tick_no, rid=req.rid,
+                            slot=slot, cls=req.priority)
+                    self.events.publish(
+                        "admitted", self.tick_no, req.rid, slot=slot,
+                        priority=req.priority)
 
     def _dispatch(self, members: List[_Run]) -> None:
         """One fused ragged (t, C) engine call: slot c retires
@@ -378,7 +499,7 @@ class BatchingScheduler:
         t_len = self.chunk_t
         if all(r.avail <= self.decode_t for r in members):
             t_len = self.decode_t
-            self.short_ticks += 1
+            self._c_short.inc()
         x = np.zeros((t_len, cap), np.float32)
         vlens = np.zeros((cap,), np.int32)
         mem = []
@@ -388,14 +509,25 @@ class BatchingScheduler:
             vlens[run.slot] = n
             run.inflight += 1
             mem.append((run, run.slot, n))
+        self._c_calls.inc()
+        span = (self.tracer.span(
+                    "dispatch", device=True, tick=self.tick_no,
+                    t=t_len, slots=len(mem),
+                    samples=int(sum(n for _, _, n in mem)))
+                if self.tracer.enabled else None)
+        if span is not None:
+            span.__enter__()
         t0 = time.perf_counter()
         out = self.pool.process(x, valid_lens=vlens)
         sync_wall = None
         if self.measure_latency:
             jax.block_until_ready(out["ecc"])
             sync_wall = time.perf_counter() - t0
+        if span is not None:
+            span.__exit__(None, None, None)
         self._inflight.append(_InFlight(
             out, mem, t_len, self.tick_no, t0, sync_wall))
+        self._g_inflight.set(len(self._inflight))
 
     def _retire(self, inf: _InFlight, events: Optional[dict]) -> None:
         """Fetch one in-flight call's outputs to host and account them.
@@ -404,15 +536,32 @@ class BatchingScheduler:
         lands one tick after dispatch, overlapped with the next call's
         device compute.  With `events=None` (a flush outside `step`),
         flagged rids are deferred into the next tick's events.
+        Every member's verdict streams on the event bus here — this is
+        the retirement moment, the earliest a verdict exists on host.
         """
-        outlier = np.asarray(inf.out["outlier"])
-        ecc = np.asarray(inf.out["ecc"]) if self.collect else None
+        if self.tracer.enabled:
+            with self.tracer.span("retire", tick=self.tick_no,
+                                  dispatch_tick=inf.tick, t=inf.t_len,
+                                  slots=len(inf.members)):
+                outlier = np.asarray(inf.out["outlier"])
+                ecc = (np.asarray(inf.out["ecc"]) if self.collect
+                       else None)
+        else:
+            outlier = np.asarray(inf.out["outlier"])
+            ecc = np.asarray(inf.out["ecc"]) if self.collect else None
         wall = (inf.sync_wall if inf.sync_wall is not None
                 else time.perf_counter() - inf.t0)
+        retired = int(sum(n for _, _, n in inf.members))
         self.call_log.append({
             "kind": "fused", "t": inf.t_len, "slots": len(inf.members),
-            "retired": int(sum(n for _, _, n in inf.members)),
+            "retired": retired,
             "wall_s": wall, "sync": inf.sync_wall is not None})
+        # running latency instrument: each call weighted by the samples
+        # it retired (stats() reads percentiles back O(1) — the old
+        # per-call re-sort of the whole log is gone)
+        self._h_wall.observe(wall * 1e3, weight=max(retired, 1))
+        self._c_samples.inc(retired)
+        stream = self.events.active
         flagged = (events["flagged"] if events is not None
                    else self._deferred_flagged)
         for run, slot, n in inf.members:
@@ -425,6 +574,7 @@ class BatchingScheduler:
             st.flags += nf
             if nf:
                 flagged.append(run.req.rid)
+                self._c_flags.inc(nf)
             if n > 1:
                 st.prefill_chunks += 1  # a multi-sample (chunked) ride
             else:
@@ -432,10 +582,27 @@ class BatchingScheduler:
             if self.collect:
                 run.ecc_parts.append(ecc[:n, slot].copy())
                 run.outlier_parts.append(col.copy())
+            if stream:
+                data = {"slot": slot, "n": n, "flags": nf,
+                        "dispatch_tick": inf.tick,
+                        "outlier": col.copy()}
+                if self.collect:
+                    data["ecc"] = ecc[:n, slot].copy()
+                self.events.publish("chunk_retired", self.tick_no,
+                                    run.req.rid, **data)
             run.inflight -= 1
+        self._g_inflight.set(len(self._inflight))
 
     def _flush(self, events: Optional[dict] = None) -> None:
         """Retire every in-flight call (the consume-side sync)."""
+        if not self._inflight:
+            return
+        if self.tracer.enabled:
+            with self.tracer.span("flush", tick=self.tick_no,
+                                  calls=len(self._inflight)):
+                while self._inflight:
+                    self._retire(self._inflight.popleft(), events)
+            return
         while self._inflight:
             self._retire(self._inflight.popleft(), events)
 
@@ -445,7 +612,7 @@ class BatchingScheduler:
         In the async loop, `flagged` events surface on the tick whose
         retirement fetched them — one tick after dispatch.
         """
-        self.tick_no += 1
+        self._c_ticks.inc()
         events: dict = {"admitted": [], "flagged": [], "completed": []}
         if self._deferred_flagged:
             events["flagged"].extend(self._deferred_flagged)
@@ -473,16 +640,25 @@ class BatchingScheduler:
         for rid in done:
             run = self.runs.pop(rid)
             run.phase = DONE
-            run.stats.done_tick = self.tick_no
+            st = run.stats
+            st.done_tick = self.tick_no
             self.pool.release([run.slot])
-            self.completed += 1
+            self._c_completed.inc()
+            ch = self._cls(st.priority)
+            ch["running"].dec()
+            ch["completed"].inc()
+            ch["latency"].observe(st.done_tick - st.submitted_tick)
             events["completed"].append(rid)
+            self.events.publish("done", self.tick_no, rid,
+                                slot=run.slot, samples=st.samples,
+                                flags=st.flags, priority=st.priority)
             self._finished[rid] = run
             while len(self._finished) > self.keep_finished:
                 old = next(iter(self._finished))  # oldest completion
                 del self._finished[old]
                 self.stats_by_rid.pop(old, None)
                 self._note_evicted(old)
+                self.events.publish("evicted", self.tick_no, old)
         return events
 
     def _note_evicted(self, rid: str) -> None:
@@ -574,51 +750,36 @@ class BatchingScheduler:
         raise self._missing(rid)
 
     def stats(self) -> dict:
-        """Aggregate scheduler telemetry (the serving-bench payload).
+        """Aggregate scheduler telemetry (the serving-bench payload),
+        read back from the obs registry in O(instruments) — nothing is
+        re-sorted or re-scanned per call.
 
-        `chunk_latency` percentiles weight each call by the samples it
-        retired (a decode-only 1-sample call no longer counts the same
-        as a full prefill chunk); `classes` carries per-priority-class
-        queue-wait and completion-latency percentiles over the
-        retained requests; `programs` lists the (capacity, t) program
-        cache — its size going flat after warmup is the no-recompile
-        guarantee of the adaptive path.
+        `chunk_latency` percentiles come from the running weighted
+        wall-time histogram (each fused call weighted by the samples
+        it retired, estimated at bucket edges); `classes` carries
+        per-priority-class state counts plus queue-wait and
+        completion-latency percentiles over *every* request the class
+        ever saw (retention eviction no longer shifts them);
+        `programs` lists the (capacity, t) program cache — its size
+        going flat after warmup is the no-recompile guarantee of the
+        adaptive path.
         """
-        walls = [c["wall_s"] for c in self.call_log]
-        weights = [max(c["retired"], 1) for c in self.call_log]
         lat = {}
-        if walls:
-            order = np.argsort(walls)
-            w = np.asarray(weights, np.float64)[order]
-            cum = np.cumsum(w) / w.sum()
-            sw = np.asarray(walls)[order]
-
-            def wpct(q):
-                i = min(int(np.searchsorted(cum, q)), len(sw) - 1)
-                return float(sw[i] * 1e3)
-
-            lat = {"calls": len(walls),
-                   "p50_ms": wpct(0.5), "p95_ms": wpct(0.95)}
+        if self._h_wall.count:
+            lat = {"calls": len(self.call_log),
+                   "p50_ms": self._h_wall.quantile(0.5),
+                   "p95_ms": self._h_wall.quantile(0.95)}
         classes: Dict[str, dict] = {}
-        for st in self.stats_by_rid.values():
-            c = classes.setdefault(st.priority, {
-                "queued": 0, "running": 0, "completed": 0,
-                "_waits": [], "_lats": []})
-            if st.done_tick is not None:
-                c["completed"] += 1
-                c["_lats"].append(st.done_tick - st.submitted_tick)
-            elif st.admitted_tick is not None:
-                c["running"] += 1
-            else:
-                c["queued"] += 1
-            if st.queue_wait_ticks is not None:
-                c["_waits"].append(st.queue_wait_ticks)
-        for c in classes.values():
-            for key, vals in (("queue_wait_ticks", c.pop("_waits")),
-                              ("latency_ticks", c.pop("_lats"))):
-                if vals:
-                    c[f"{key}_p50"] = float(np.percentile(vals, 50))
-                    c[f"{key}_p95"] = float(np.percentile(vals, 95))
+        for cls, ch in self._classes.items():
+            c = {"queued": int(ch["queued"].value),
+                 "running": int(ch["running"].value),
+                 "completed": int(ch["completed"].value)}
+            for key, h in (("queue_wait_ticks", ch["wait"]),
+                           ("latency_ticks", ch["latency"])):
+                if h.count:
+                    c[f"{key}_p50"] = h.quantile(0.5)
+                    c[f"{key}_p95"] = h.quantile(0.95)
+            classes[cls] = c
         return {"ticks": self.tick_no, "completed": self.completed,
                 "running": len(self.runs), "queued": self.queued_total,
                 "rejected_submits": self.rejected,

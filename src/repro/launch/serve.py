@@ -57,7 +57,9 @@ def serve_streams(streams: Sequence[tuple],
                   arrivals_per_tick: Optional[int] = None,
                   feed_per_tick: int = 1, collect: bool = False,
                   measure_latency: bool = True,
-                  max_ticks: int = 1_000_000, **engine_opts) -> dict:
+                  max_ticks: int = 1_000_000,
+                  registry=None, tracer=None, on_event=None,
+                  **engine_opts) -> dict:
     """Serve tenant streams through the continuous-batching scheduler.
 
     `streams` is a sequence of (rid, history, live, m) or
@@ -77,8 +79,15 @@ def serve_streams(streams: Sequence[tuple],
     compute); True keeps the synchronous loop so per-chunk wall times
     are honest latencies.
 
+    Observability (`repro.obs`): `registry`/`tracer` pass through to
+    the scheduler (and down to pool + engines); `on_event` is a
+    callback receiving each streamed `Event` (admitted /
+    chunk_retired / done / evicted) as it retires — the push side of
+    `BatchingScheduler.subscribe()`.
+
     Returns sustained rates, latency percentiles, queue-wait stats,
-    per-priority-class telemetry and per-request telemetry.
+    per-priority-class telemetry, per-request telemetry, and a
+    `metrics` registry snapshot.
     """
     class _Rec:
         __slots__ = ("req", "live", "fed", "closed")
@@ -102,7 +111,10 @@ def serve_streams(streams: Sequence[tuple],
     sched = BatchingScheduler(
         backend, buckets=buckets, chunk_t=chunk_t, m=m, fmt=fmt,
         interpret=interpret, queue_limit=queue_limit, collect=collect,
-        measure_latency=measure_latency, **engine_opts)
+        measure_latency=measure_latency, registry=registry,
+        tracer=tracer, **engine_opts)
+    if on_event is not None:
+        sched.events.attach(on_event)
     waiting = deque(recs.values())
     total_samples = sum(len(r.req.history) + len(r.live)
                         for r in recs.values())
@@ -161,6 +173,7 @@ def serve_streams(streams: Sequence[tuple],
                           if sched.telemetry(rid).flags),
         "pool": agg["pool"],
         "per_request": per_request,
+        "metrics": sched.registry.snapshot(),
         "_scheduler": sched,  # for tests; stripped by the benchmark
     }
 

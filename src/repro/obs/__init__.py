@@ -1,0 +1,30 @@
+"""repro.obs — dependency-free observability for the serving stack.
+
+Three parts, all host-side and zero-overhead when unused:
+
+  * `metrics` — Counter/Gauge/Histogram instruments with labels in a
+    `MetricsRegistry` (JSON snapshot + Prometheus text exposition);
+    the engine, pool and scheduler keep their telemetry here and
+    `stats()` reads it back O(1).
+  * `trace` — `TickTracer`, a bounded ring buffer of span events
+    (admit/dispatch/retire/flush, pool resizes, program compiles)
+    exportable as Chrome trace-event JSON for Perfetto; `NULL_TRACER`
+    is the free disabled default.
+  * `events` — `EventBus`: the scheduler streams structured events
+    (admitted / chunk_retired / done / evicted) at retirement via
+    `BatchingScheduler.subscribe()` and `serve_streams(on_event=)`.
+
+See README §observability.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram,
+                               LATENCY_MS_BUCKETS, MetricsRegistry,
+                               TICK_BUCKETS, auto_name, get_registry)
+from repro.obs.trace import NULL_TRACER, NullTracer, TickTracer
+from repro.obs.events import Event, EventBus, Subscription
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "get_registry",
+    "auto_name", "LATENCY_MS_BUCKETS", "TICK_BUCKETS",
+    "TickTracer", "NullTracer", "NULL_TRACER",
+    "Event", "EventBus", "Subscription",
+]
