@@ -28,7 +28,9 @@ Three load shapes per backend x offered load:
     is what the CI regression gate guards for the fast path.
 
 Emits a JSON table (one row per backend x offered load x shape); each
-row embeds a `metrics` summary of the run's `repro.obs` registry
+row carries `vs_paper_fpga` — its samples/s as a fraction of the
+paper's 7.2 MSPS FPGA line (Table 5), the north-star ratio — and
+embeds a `metrics` summary of the run's `repro.obs` registry
 snapshot (counters/gauges verbatim, histograms as count/sum/p50/p95)
 — the evidence trail `check_regression.py --explain` cites.  With
 `--trace PATH` every run records into one shared `TickTracer` and the
@@ -52,6 +54,7 @@ from repro.obs import TickTracer
 
 
 CLASS_WEIGHTS = {"latency": 4.0, "bulk": 1.0}
+PAPER_FPGA_MSPS = 7.2  # Table 5, sustained MSPS of the FPGA pipeline
 
 
 def summarize_snapshot(snap: dict) -> dict:
@@ -133,6 +136,7 @@ def bench_one(backend: str, offered_load: int, *, n_requests: int,
         "ticks": res["ticks"],
         "requests_per_s": res["requests_per_s"],
         "samples_per_s": res["samples_per_s"],
+        "vs_paper_fpga": res["samples_per_s"] / 1e6 / PAPER_FPGA_MSPS,
         "chunk_lat_p50_ms": lat.get("p50_ms", 0.0),
         "chunk_lat_p95_ms": lat.get("p95_ms", 0.0),
         "queue_wait_ticks_p95": res["queue_wait_ticks_p95"],
@@ -213,7 +217,7 @@ def main(argv=None):
                fl=args.fl, interpret=interpret, shapes=shapes,
                tracer=tracer)
     doc = {"bench": "serving_throughput", "smoke": bool(args.smoke),
-           "rows": rows}
+           "paper_fpga_msps": PAPER_FPGA_MSPS, "rows": rows}
     text = json.dumps(doc, indent=2)
     print(text)
     if args.out:

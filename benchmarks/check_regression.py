@@ -35,7 +35,8 @@ import sys
 
 # row fields that identify a configuration (everything else is measured)
 ID_KEYS = ("bench", "backend", "chunk_t", "decode_t", "offered_load",
-           "shape", "channels")
+           "shape", "channels", "block_t", "block_c", "outputs",
+           "pipeline_depth")
 METRIC = "samples_per_s"
 
 

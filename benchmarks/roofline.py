@@ -2,6 +2,20 @@
 
 Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
 Prints a markdown table (used verbatim in EXPERIMENTS.md) and a CSV.
+
+With `--teda` the script instead emits an *analytic* roofline for the
+TEDA Pallas kernels themselves (no measurement): per output contract it
+models the HBM traffic per sample, the VMEM footprint of one
+(block_t, block_c) grid step — including the Q kernel's two banked
+recurrence scratch tiles — against the per-core VMEM budget, and the
+memory-bound throughput ceiling at a nominal HBM bandwidth, expressed
+both in MSPS and as a multiple of the paper's 7.2 MSPS FPGA line
+(Table 5).  The TEDA recurrence does O(10) ALU ops per sample against
+a 9-17 byte HBM footprint, so on any TPU the kernels sit far on the
+memory-bound side of the roofline: the ceiling is bytes/sample * BW,
+which is why the verdict contract (9 B/sample) is the serving hot path.
+
+    PYTHONPATH=src python benchmarks/roofline.py --teda [--smoke] [--out f]
 """
 from __future__ import annotations
 
@@ -9,6 +23,85 @@ import argparse
 import glob
 import json
 import os
+
+PAPER_FPGA_MSPS = 7.2  # Table 5, sustained MSPS of the FPGA pipeline
+VMEM_BUDGET_BYTES = 16 * 2 ** 20  # ~16 MiB VMEM per TPU core
+NOMINAL_HBM_GBPS = 819.0  # TPU v5e-class HBM bandwidth
+
+# HBM bytes moved per stream sample, by (backend, output contract):
+# every sample is read once (f32 / int32 Q-word); the contract decides
+# what is written back.  The Q kernels flag with int8; the float full
+# contract keeps its historical int32 flag.
+_HBM_BYTES = {
+    ("pallas", "full"): 4 + (4 + 4 + 4 + 4),    # x | mean,var,ecc,flag(i32)
+    ("pallas", "verdict"): 4 + (4 + 1),         # x | ecc,flag(i8)
+    ("pallas-q", "full"): 4 + (4 + 4 + 4 + 1),  # x | mean,var,ecc,flag(i8)
+    ("pallas-q", "verdict"): 4 + (4 + 1),       # x | ecc,flag(i8)
+}
+
+
+def teda_vmem_bytes(backend: str, outputs: str, block_t: int,
+                    block_c: int) -> int:
+    """VMEM resident during one (block_t, block_c) grid step.
+
+    Tiles: the x input plus the per-contract output tiles; the Q kernel
+    additionally banks the mean/var recurrence rows in two scratch
+    tiles so every divider runs as a whole-block pass.  Rows: vlen +
+    3 init rows + 3 final rows + 2 carry scratch rows, all (1, block_c).
+    """
+    tile4 = block_t * block_c * 4
+    tile1 = block_t * block_c
+    row4 = block_c * 4
+    if outputs == "full":
+        out_tiles = 3 * tile4 + (tile4 if backend == "pallas" else tile1)
+    else:
+        out_tiles = tile4 + tile1
+    scratch_tiles = 2 * tile4 if backend == "pallas-q" else 0
+    return tile4 + out_tiles + scratch_tiles + 9 * row4
+
+
+def teda_rows(block_ts, block_cs, bw_gbps: float):
+    rows = []
+    for backend in ("pallas", "pallas-q"):
+        kernel = "teda_q_scan" if backend == "pallas-q" else "teda_scan"
+        for outputs in ("full", "verdict"):
+            bps = _HBM_BYTES[(backend, outputs)]
+            ceiling_msps = bw_gbps * 1e9 / bps / 1e6
+            for bt in block_ts:
+                for bc in block_cs:
+                    vmem = teda_vmem_bytes(backend, outputs, bt, bc)
+                    rows.append({
+                        "kernel": kernel,
+                        "backend": backend,
+                        "outputs": outputs,
+                        "block_t": bt,
+                        "block_c": bc,
+                        "hbm_bytes_per_sample": bps,
+                        "vmem_tile_bytes": vmem,
+                        "vmem_budget_bytes": VMEM_BUDGET_BYTES,
+                        "vmem_fits": vmem <= VMEM_BUDGET_BYTES,
+                        "bound": "memory",
+                        "ceiling_msps": ceiling_msps,
+                        "vs_paper_fpga": ceiling_msps / PAPER_FPGA_MSPS,
+                    })
+    return rows
+
+
+def teda_main(args):
+    block_ts = [int(s) for s in args.block_ts.split(",")]
+    block_cs = [int(s) for s in args.block_cs.split(",")]
+    if args.smoke:
+        block_ts, block_cs = block_ts[:2], block_cs[:2]
+    rows = teda_rows(block_ts, block_cs, args.bw_gbps)
+    doc = {"bench": "roofline_teda", "smoke": bool(args.smoke),
+           "hbm_gbps": args.bw_gbps,
+           "paper_fpga_msps": PAPER_FPGA_MSPS, "rows": rows}
+    text = json.dumps(doc, indent=2)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    return doc
 
 
 def load(dir_: str):
@@ -64,13 +157,27 @@ def csv(rows):
     return "\n".join(out)
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--format", default="markdown",
                     choices=["markdown", "csv"])
     ap.add_argument("--mesh", default="single")
-    args = ap.parse_args()
+    ap.add_argument("--teda", action="store_true",
+                    help="analytic TEDA-kernel roofline (JSON) instead "
+                         "of the dry-run table")
+    ap.add_argument("--block-ts", default="256,128",
+                    help="time-block depths for --teda")
+    ap.add_argument("--block-cs", default="128,256,512,1024",
+                    help="channel-block widths for --teda")
+    ap.add_argument("--bw-gbps", type=float, default=NOMINAL_HBM_GBPS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="--teda only: trim the tile sweep for CI")
+    ap.add_argument("--out", default=None,
+                    help="--teda only: write the JSON doc here")
+    args = ap.parse_args(argv)
+    if args.teda:
+        return teda_main(args)
     rows = load(args.dir)
     if not rows:
         print("no dry-run results yet; run python -m repro.launch.dryrun")

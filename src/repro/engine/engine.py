@@ -52,10 +52,11 @@ class StreamEngine:
 
     def __init__(self, capacity: int, backend: str = "scan", *,
                  m: float = 3.0, fmt=None, block_t: int = 256,
+                 block_c: Optional[int] = None,
                  interpret: Optional[bool] = None, lane_pad: int = 128,
                  mesh=None, axis_name: str = "data",
                  auto_attach: bool = True, registry=None, tracer=None,
-                 name: Optional[str] = None):
+                 name: Optional[str] = None, **backend_opts):
         self.capacity = int(capacity)
         self.default_m = float(m)
         # observability (repro.obs): process-call / samples-retired /
@@ -82,8 +83,13 @@ class StreamEngine:
         # of state.active (replaced by attach/detach/reset/resize):
         # metrics never force an extra device fetch per call
         self._active_cache = (None, 0)
+        # block_c tiles the kernel grid's channel axis into parallel
+        # strips (multi-core TPU scaling at wide capacity); extra
+        # keyword options flow to the backend factory untouched (e.g.
+        # verdict=False selects the full-trajectory Q path)
         self.backend = get_backend(backend, m=m, fmt=fmt, block_t=block_t,
-                                   interpret=interpret, lane_pad=lane_pad)
+                                   block_c=block_c, interpret=interpret,
+                                   lane_pad=lane_pad, **backend_opts)
         self.state = engine_init(self.capacity, self.backend.state_dtype,
                                  active=auto_attach)
         # per-slot outlier sensitivity, eq (6) m — float even on the Q

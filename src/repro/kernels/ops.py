@@ -1,12 +1,13 @@
 """Jitted public wrappers around the TEDA Pallas kernels.
 
-One contract layer for all three kernel entry points (full float, slim
-verdict-only float, bit-accurate Q-format): `state_vectors` normalizes
-carried state to honest per-channel (C,) vectors — a per-channel `k` is
-preserved end-to-end, never collapsed to a shared scalar — and
-`_pad_layout` owns the lane/sublane padding.  The kernels mask padded
-time rows internally against the true valid length, so the final state
-is *always* returned, for every T (no `final=None` path remains).
+One contract layer for all four kernel entry points (full float, slim
+verdict-only float, full Q-format, slim verdict-only Q-format):
+`state_vectors` normalizes carried state to honest per-channel (C,)
+vectors — a per-channel `k` is preserved end-to-end, never collapsed to
+a shared scalar — and `_pad_layout` owns the lane/sublane padding.  The
+kernels mask padded time rows internally against the true valid length,
+so the final state is *always* returned, for every T (no `final=None`
+path remains).
 
 `m` may be a scalar or a per-channel (C,) vector (multi-tenant slots
 run different sensitivity levels in one batch).  The kernels take a
@@ -26,6 +27,14 @@ the ragged verdict masking entirely and is bit-identical to a
 broadcast vlen=T vector — the kernels have a single vector code path.
 Per-sample outputs at rows >= vlen[c] are unspecified except `outlier`,
 which is guaranteed False there.
+
+`block_c` tiles the channel axis into independent grid strips (the
+kernels' 2-D `(channel-block, time-block)` grid); channels are fully
+independent in TEDA, so every block_c produces identical bits — `None`
+keeps one strip spanning all lanes (the 1-D-grid behavior).  On
+multi-core TPUs the strips are the unit of core parallelism; the
+channel extent is padded up to a block multiple and padded lanes carry
+vlen=0 (frozen at state zero, no verdicts).
 """
 from __future__ import annotations
 
@@ -42,7 +51,7 @@ from repro.kernels.teda_scan import teda_pallas_call
 from repro.kernels.teda_q_scan import teda_q_pallas_call
 
 __all__ = ["teda_scan_tpu", "teda_scan_verdict", "teda_q_scan_tpu",
-           "default_interpret", "state_vectors"]
+           "teda_q_scan_verdict", "default_interpret", "state_vectors"]
 
 
 def default_interpret() -> bool:
@@ -52,6 +61,14 @@ def default_interpret() -> bool:
 
 def _round_up(v: int, mult: int) -> int:
     return -(-v // mult) * mult
+
+
+def _norm_block_c(block_c) -> int:
+    """Normalize the channel-block width to a static int (0 = one strip)."""
+    bc = int(block_c or 0)
+    if bc and bc % 128 != 0:
+        raise ValueError(f"block_c must be a multiple of 128, got {bc}")
+    return bc
 
 
 def state_vectors(state: Optional[TedaState], c: int, dtype
@@ -105,8 +122,9 @@ def _mask_ragged_rows(outlier, vlen, t_len: int):
     return jnp.logical_and(outlier, rows < vlen[None, :])
 
 
-def _pad_layout(x, rows, block_t, lane_pad):
-    """Shared kernel-layout padding: time to block_t, lanes to lane_pad.
+def _pad_layout(x, rows, block_t, lane_pad, block_c=0):
+    """Shared kernel-layout padding: time to block_t, lanes to lane_pad
+    and (when channel-blocking) to a block_c multiple.
 
     `rows` are per-channel (C,) carry vectors, returned as padded (1, C')
     rows.  Returns (padded x, padded rows, un-pad slice).  Every wrapper
@@ -116,6 +134,8 @@ def _pad_layout(x, rows, block_t, lane_pad):
     t_len, c = x.shape
     tp = _round_up(max(t_len, block_t), block_t)
     cp = _round_up(c, lane_pad)
+    if block_c:
+        cp = _round_up(cp, block_c)
     xp = jnp.pad(x, ((0, tp - t_len), (0, cp - c)))
     rp = tuple(jnp.pad(r.reshape(1, c), ((0, 0), (0, cp - c)))
                for r in rows)
@@ -123,41 +143,47 @@ def _pad_layout(x, rows, block_t, lane_pad):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("block_t", "interpret", "lane_pad",
-                                    "verdict_only"))
-def _padded_call(x, m, vlen, k0, sum0, var0, *, block_t, interpret,
-                 lane_pad, verdict_only):
+                   static_argnames=("block_t", "block_c", "interpret",
+                                    "lane_pad", "verdict_only"))
+def _padded_call(x, m, vlen, k0, sum0, var0, *, block_t, block_c,
+                 interpret, lane_pad, verdict_only):
     # lane-padded channels get vlen=0 from the zero pad: frozen at state 0
     t_len, c = x.shape
     xp, (vlp, kp, sp, vp), sl = _pad_layout(x, (vlen, k0, sum0, var0),
-                                            block_t, lane_pad)
+                                            block_t, lane_pad, block_c)
     scal = jnp.asarray(m, jnp.float32).reshape(1)
     outs = teda_pallas_call(xp, scal, vlp, kp, sp, vp, block_t=block_t,
-                            interpret=interpret, verdict_only=verdict_only)
-    rows, (fsum, fvar) = outs[:-2], outs[-2:]
-    return tuple(r[sl] for r in rows) + (fsum[0, :c], fvar[0, :c])
+                            block_c=block_c, interpret=interpret,
+                            verdict_only=verdict_only)
+    rows, (fk, fsum, fvar) = outs[:-3], outs[-3:]
+    return tuple(r[sl] for r in rows) + (fk[0, :c], fsum[0, :c],
+                                         fvar[0, :c])
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("fmt", "block_t", "interpret",
-                                    "lane_pad"))
+                   static_argnames=("fmt", "block_t", "block_c",
+                                    "interpret", "lane_pad",
+                                    "verdict_only"))
 def _padded_q_call(xq, msq1, vlen, k0, mean0, var0, *, fmt, block_t,
-                   interpret, lane_pad):
+                   block_c, interpret, lane_pad, verdict_only):
     # zero-padded channels stay at mean=var=0 (vlen=0: frozen carries)
     t_len, c = xq.shape
     xp, (vlp, kp, mp, vp), sl = _pad_layout(xq, (vlen, k0, mean0, var0),
-                                            block_t, lane_pad)
+                                            block_t, lane_pad, block_c)
     scal = jnp.asarray(msq1, jnp.int32).reshape(1)
-    mean, var, ecc, outlier, fmean, fvar = teda_q_pallas_call(
-        xp, scal, vlp, kp, mp, vp, fmt=fmt, block_t=block_t,
-        interpret=interpret)
-    return (mean[sl], var[sl], ecc[sl], outlier[sl],
-            fmean[0, :c], fvar[0, :c])
+    outs = teda_q_pallas_call(xp, scal, vlp, kp, mp, vp, fmt=fmt,
+                              block_t=block_t, block_c=block_c,
+                              interpret=interpret,
+                              verdict_only=verdict_only)
+    rows, (fk, fmean, fvar) = outs[:-3], outs[-3:]
+    return tuple(r[sl] for r in rows) + (fk[0, :c], fmean[0, :c],
+                                         fvar[0, :c])
 
 
 def teda_scan_verdict(x: jnp.ndarray, m: float | jnp.ndarray = 3.0,
                       state: Optional[TedaState] = None, *,
                       valid_lens=None, block_t: int = 256,
+                      block_c: Optional[int] = None,
                       interpret: Optional[bool] = None,
                       lane_pad: int = 128):
     """Slim-output TEDA kernel: (final state, {ecc, outlier}).
@@ -170,6 +196,7 @@ def teda_scan_verdict(x: jnp.ndarray, m: float | jnp.ndarray = 3.0,
     per-channel (C,); eq (6) is then re-evaluated outside the kernel
     (see module docs).  `valid_lens` may be a scalar or per-channel
     (C,) vector of leading valid row counts (see module docs).
+    `block_c` tiles the channel axis into parallel grid strips.
     """
     if interpret is None:
         interpret = default_interpret()
@@ -179,18 +206,17 @@ def teda_scan_verdict(x: jnp.ndarray, m: float | jnp.ndarray = 3.0,
     vlen, ragged = _vlen_vec(valid_lens, t_len, c, jnp.float32)
     m_arr = jnp.asarray(m, jnp.float32)
     per_slot = m_arr.ndim > 0
-    ecc, outlier, fsum, fvar = _padded_call(
+    ecc, outlier, fk, fsum, fvar = _padded_call(
         x, jnp.float32(0.0) if per_slot else m_arr, vlen, k0, mean0 * k0,
-        var0, block_t=block_t, interpret=interpret, lane_pad=lane_pad,
-        verdict_only=True)
+        var0, block_t=block_t, block_c=_norm_block_c(block_c),
+        interpret=interpret, lane_pad=lane_pad, verdict_only=True)
     if per_slot:
         k_all = _k_rows(k0, t_len, jnp.float32)
         thr = (m_arr[None, :] * m_arr[None, :] + 1.0) / (2.0 * k_all)
         outlier = jnp.logical_and(ecc * 0.5 > thr, k_all >= 2.0)
     if ragged:
         outlier = _mask_ragged_rows(outlier, vlen, t_len)
-    kf = k0 + vlen
-    final = TedaState(k=kf, mean=(fsum / jnp.maximum(kf, 1.0))[:, None],
+    final = TedaState(k=fk, mean=(fsum / jnp.maximum(fk, 1.0))[:, None],
                       var=fvar)
     return final, {"ecc": ecc, "outlier": outlier.astype(bool)}
 
@@ -198,6 +224,7 @@ def teda_scan_verdict(x: jnp.ndarray, m: float | jnp.ndarray = 3.0,
 def teda_scan_tpu(x: jnp.ndarray, m: float | jnp.ndarray = 3.0,
                   state: Optional[TedaState] = None, *,
                   valid_lens=None, block_t: int = 256,
+                  block_c: Optional[int] = None,
                   interpret: Optional[bool] = None,
                   lane_pad: int = 128) -> Tuple[TedaState, dict]:
     """TEDA over x (T, C) — C independent univariate streams.
@@ -209,6 +236,7 @@ def teda_scan_tpu(x: jnp.ndarray, m: float | jnp.ndarray = 3.0,
     eq (6) is then re-evaluated outside the kernel (see module docs).
     `valid_lens` may be a scalar or per-channel (C,) vector of leading
     valid row counts — one call retires vlen[c] samples per channel.
+    `block_c` tiles the channel axis into parallel grid strips.
     """
     if interpret is None:
         interpret = default_interpret()
@@ -219,10 +247,10 @@ def teda_scan_tpu(x: jnp.ndarray, m: float | jnp.ndarray = 3.0,
     m_arr = jnp.asarray(m, jnp.float32)
     per_slot = m_arr.ndim > 0
 
-    mean, var, ecc, outlier, fsum, fvar = _padded_call(
+    mean, var, ecc, outlier, fk, fsum, fvar = _padded_call(
         x, jnp.float32(0.0) if per_slot else m_arr, vlen, k0, mean0 * k0,
-        var0, block_t=block_t, interpret=interpret, lane_pad=lane_pad,
-        verdict_only=False)
+        var0, block_t=block_t, block_c=_norm_block_c(block_c),
+        interpret=interpret, lane_pad=lane_pad, verdict_only=False)
 
     k_all = _k_rows(k0, t_len, jnp.float32)
     zeta = ecc * 0.5
@@ -231,18 +259,73 @@ def teda_scan_tpu(x: jnp.ndarray, m: float | jnp.ndarray = 3.0,
         outlier = jnp.logical_and(zeta > thr, k_all >= 2.0)
     if ragged:
         outlier = _mask_ragged_rows(outlier, vlen, t_len)
-    kf = k0 + vlen
-    final = TedaState(k=kf, mean=(fsum / jnp.maximum(kf, 1.0))[:, None],
+    final = TedaState(k=fk, mean=(fsum / jnp.maximum(fk, 1.0))[:, None],
                       var=fvar)
     outs = {"mean": mean, "var": var, "ecc": ecc, "zeta": zeta,
             "threshold": thr, "outlier": outlier.astype(bool)}
     return final, outs
 
 
+def _quantize_in(x, fmt: QFormat):
+    if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating):
+        return fmt.quantize(x)
+    return jnp.asarray(x, jnp.int32)
+
+
+def teda_q_scan_verdict(x: jnp.ndarray, fmt: QFormat,
+                        m: float | jnp.ndarray = 3.0,
+                        state: Optional[TedaState] = None, *,
+                        valid_lens=None, block_t: int = 256,
+                        block_c: Optional[int] = None,
+                        interpret: Optional[bool] = None,
+                        lane_pad: int = 128) -> Tuple[TedaState, dict]:
+    """Slim-output Q-format TEDA kernel: (final state, {ecc, outlier}).
+
+    The serving engine consumes only the verdict stream and the carried
+    state, and the full wrapper's extra work is expensive out of all
+    proportion on the Q path: per-row mean/var HBM writes inside the
+    kernel, plus a host-side (T, C) *bit-serial* `div_qi` re-derivation
+    of the eq (6) threshold that the engine never reads (~WL iterations
+    per element — it dominated the PR 6 pallas-q profile).  This wrapper
+    skips both: with scalar `m` the kernel's own in-loop verdict (the
+    same `_q_step_u` bits) is returned as-is, so `ecc`/`outlier`/final
+    state are bit-exact with `teda_q_scan_tpu` and with the pure-JAX
+    `teda_q_scan_chan` oracle.  Per-channel `m` still re-evaluates
+    eq (6) outside with the same `div_qi` arithmetic (only then is the
+    threshold actually needed).  `block_c` tiles the channel axis into
+    parallel grid strips.  This is the engine's Q hot path.
+    """
+    fmt.validate()
+    if interpret is None:
+        interpret = default_interpret()
+    xq = _quantize_in(x, fmt)
+    t_len, c = xq.shape
+    k0, mean0, var0 = state_vectors(state, c, jnp.int32)
+    vlen, ragged = _vlen_vec(valid_lens, t_len, c, jnp.int32)
+    msq1 = msq1_const(fmt, m)
+    per_slot = jnp.asarray(msq1).ndim > 0
+
+    ecc, outlier, fk, fmean, fvar = _padded_q_call(
+        xq, jnp.int32(0) if per_slot else msq1, vlen, k0, mean0, var0,
+        fmt=fmt, block_t=block_t, block_c=_norm_block_c(block_c),
+        interpret=interpret, lane_pad=lane_pad, verdict_only=True)
+
+    if per_slot:
+        k_all = _k_rows(k0, t_len, jnp.int32)
+        thr = div_qi(fmt, jnp.broadcast_to(jnp.asarray(msq1, jnp.int32),
+                                           k_all.shape), 2 * k_all)
+        outlier = jnp.logical_and(ecc >> 1 > thr, k_all >= 2)
+    if ragged:
+        outlier = _mask_ragged_rows(outlier, vlen, t_len)
+    final = TedaState(k=fk, mean=fmean[:, None], var=fvar)
+    return final, {"ecc": ecc, "outlier": outlier.astype(bool)}
+
+
 def teda_q_scan_tpu(x: jnp.ndarray, fmt: QFormat,
                     m: float | jnp.ndarray = 3.0,
                     state: Optional[TedaState] = None, *,
                     valid_lens=None, block_t: int = 256,
+                    block_c: Optional[int] = None,
                     interpret: Optional[bool] = None,
                     lane_pad: int = 128) -> Tuple[TedaState, dict]:
     """Bit-accurate Q-format TEDA kernel over x (T, C) channel streams.
@@ -260,23 +343,25 @@ def teda_q_scan_tpu(x: jnp.ndarray, fmt: QFormat,
     `valid_lens` may be a scalar or per-channel (C,) vector of leading
     valid row counts — one fused call retires vlen[c] samples per
     channel, bit-exact with per-channel isolated runs of each prefix.
+    `block_c` tiles the channel axis into parallel grid strips.  The
+    serving hot path is `teda_q_scan_verdict`; this full wrapper keeps
+    the complete (T, C) Q trajectory (mean/var/zeta/threshold) for
+    oracle tests and offline analysis.
     """
     fmt.validate()
     if interpret is None:
         interpret = default_interpret()
-    if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating):
-        xq = fmt.quantize(x)
-    else:
-        xq = jnp.asarray(x, jnp.int32)
+    xq = _quantize_in(x, fmt)
     t_len, c = xq.shape
     k0, mean0, var0 = state_vectors(state, c, jnp.int32)
     vlen, ragged = _vlen_vec(valid_lens, t_len, c, jnp.int32)
     msq1 = msq1_const(fmt, m)
     per_slot = jnp.asarray(msq1).ndim > 0
 
-    mean, var, ecc, outlier, fmean, fvar = _padded_q_call(
+    mean, var, ecc, outlier, fk, fmean, fvar = _padded_q_call(
         xq, jnp.int32(0) if per_slot else msq1, vlen, k0, mean0, var0,
-        fmt=fmt, block_t=block_t, interpret=interpret, lane_pad=lane_pad)
+        fmt=fmt, block_t=block_t, block_c=_norm_block_c(block_c),
+        interpret=interpret, lane_pad=lane_pad, verdict_only=False)
 
     k_all = _k_rows(k0, t_len, jnp.int32)
     zeta = ecc >> 1
@@ -286,7 +371,7 @@ def teda_q_scan_tpu(x: jnp.ndarray, fmt: QFormat,
         outlier = jnp.logical_and(zeta > thr, k_all >= 2)
     if ragged:
         outlier = _mask_ragged_rows(outlier, vlen, t_len)
-    final = TedaState(k=k0 + vlen, mean=fmean[:, None], var=fvar)
+    final = TedaState(k=fk, mean=fmean[:, None], var=fvar)
     outs = {"mean": mean, "var": var, "ecc": ecc, "zeta": zeta,
             "threshold": thr, "outlier": outlier.astype(bool)}
     return final, outs

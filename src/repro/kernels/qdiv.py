@@ -1,0 +1,96 @@
+"""Host-width exact image of the fixed-point bit-serial divider.
+
+`repro.fixedpoint.qformat._div_mag` is the *model*: a restoring
+shift-subtract long division, one quotient bit per iteration, mirroring
+the FPGA divider clock-for-clock.  Running that model on a host vector
+unit costs 31+FL tiny dependent ops per divide — the dominant cost of
+the integer Pallas kernel once everything else is vectorized.
+
+This module computes the *same function* with host arithmetic:
+
+  * the first 31 iterations of the model stream the 31 magnitude bits
+    of the numerator, after which the long-division invariant gives
+    exactly `q = floor(n / d)`, `r = n mod d` — one hardware integer
+    divide reproduces them;
+  * the remaining `shift` iterations stream zeros — for the Q/Q
+    configuration (shift = FL) they are kept as explicit restoring
+    steps on the sub-32-bit remainder (the 51-bit dividend is never
+    materialized, exactly like the model), for the Q/int configuration
+    (shift = 0) there are none;
+  * the round-half-up correction, the d == 0 saturation and the
+    quotient-overflow (`lost`) tracking replicate the model's bitwise.
+
+Bit-for-bit equality with `_div_mag` over the full operand range is a
+tested invariant (tests/test_qdiv.py), so kernels built on these
+stay bit-exact with the `teda_q_scan_chan` oracle — the dividers are
+elementwise, and every element sees the same quotient either way.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.fixedpoint.qformat import QFormat
+
+__all__ = ["fast_div_mag", "fast_div_qq", "fast_div_qi"]
+
+_I32 = jnp.int32
+_U32 = jnp.uint32
+
+
+def fast_div_mag(n: jnp.ndarray, d: jnp.ndarray, shift: int,
+                 rounding: str, qmax: int) -> jnp.ndarray:
+    """floor((n << shift) / d) on uint32 magnitudes — `_div_mag` bits.
+
+    n, d uint32 with n < 2^31; returns the quotient saturated to
+    [0, qmax], rounded half-up when `rounding == "round"`.
+    """
+    n, d = jnp.broadcast_arrays(n, d)
+    dz = d == 0  # the model's guard-free divider saturates on d == 0
+    ds = jnp.where(dz, _U32(1), d)
+
+    # iterations 0..30 of the model in one divide: q = n/d, r = n%d
+    q = n // ds
+    r = n - q * ds
+    lost = jnp.zeros_like(n)
+
+    # iterations 31..31+shift-1: dividend bits are zero, the remainder
+    # stays below 2^31 (r < d), so only q can shed a high bit
+    for _ in range(shift):
+        lost = lost | (q >> _U32(31))
+        r = r << _U32(1)
+        ge = r >= ds
+        q = (q << _U32(1)) | ge.astype(_U32)
+        r = jnp.where(ge, r - ds, r)
+
+    if rounding == "round":
+        half_up = r >= (ds >> _U32(1)) + (ds & _U32(1))
+        q2 = q + half_up.astype(_U32)
+        lost = lost | (q2 < q).astype(_U32)
+        q = q2
+    return jnp.where(dz | (lost > 0) | (q > _U32(qmax)), _U32(qmax), q)
+
+
+def fast_div_qq(fmt: QFormat, num: jnp.ndarray, den: jnp.ndarray
+                ) -> jnp.ndarray:
+    """Saturating Q / Q -> Q, bit-equal to `qformat.div_qq`."""
+    num = jnp.asarray(num, _I32)
+    den = jnp.asarray(den, _I32)
+    num, den = jnp.broadcast_arrays(num, den)
+    neg = (num < 0) != (den < 0)
+    q = fast_div_mag(jnp.abs(num).astype(_U32), jnp.abs(den).astype(_U32),
+                     fmt.frac_len, fmt.rounding, fmt.qmax)
+    q = q.astype(_I32)
+    return jnp.where(neg, -q, q)
+
+
+def fast_div_qi(fmt: QFormat, num: jnp.ndarray, k: jnp.ndarray
+                ) -> jnp.ndarray:
+    """Saturating Q / int -> Q, bit-equal to `qformat.div_qi`."""
+    num = jnp.asarray(num, _I32)
+    k = jnp.asarray(k, _I32)
+    num, k = jnp.broadcast_arrays(num, k)
+    neg = (num < 0) != (k < 0)
+    q = fast_div_mag(jnp.abs(num).astype(_U32), jnp.abs(k).astype(_U32),
+                     0, fmt.rounding, fmt.qmax)
+    q = q.astype(_I32)
+    return jnp.where(neg, -q, q)

@@ -5,24 +5,59 @@ depends on operation order — so the float kernel's prefix-sum tricks
 would change the bits.  Instead this kernel is the direct TPU analog of
 the FPGA pipeline: a sequential row loop inside each time-chunk (one
 sample retired per "cycle", exactly like the paper's critical path),
-vectorized across the 128-lane channel axis.  The grid still walks
-time-chunks, so Mosaic overlaps the HBM->VMEM DMA of chunk i+1 with
-compute on chunk i — the inter-module pipeline registers' role.
+vectorized across the 128-lane channel axis.  The grid is 2-D
+`(channel-block, time-block)`: the minor (time) axis walks time-chunks
+sequentially — Mosaic overlaps the HBM->VMEM DMA of chunk i+1 with
+compute on chunk i, the inter-module pipeline registers' role — while
+the major axis tiles the channel lanes into independent `block_c`-wide
+strips declared `parallel`, so a wide-C engine splits across TPU cores
+instead of serializing every lane through one.
 
-Each row executes `repro.fixedpoint.teda_q._q_step_u`, the same
-function `teda_q_scan_chan` scans over, which makes this kernel
-bit-exact with the pure-JAX Q scan by construction.
+Inside a block the datapath is *rescheduled* around the bit-serial
+dividers (the FPGA's multi-cycle units, ~WL iterations each).  Only
+the MEAN and VARIANCE recurrences are genuinely sequential, and both
+are a saturating multiply-add once their divider terms exist; every
+divider input is either counter-only (rk=(k-1)/k, 1/k, (m^2+1)/2k),
+depends only on the samples (x/k), or is a pure per-row function of
+values the recurrences produce (d2/k, d2/var, ratio/k).  So the kernel
+runs two sequential register loops — one bare saturating multiply-add
+per sample each, the MEAN and VARIANCE accumulator registers, with the
+k=1 overrides folded into the hoisted terms (rk = 0 and x/1 = x at
+k=1) — and executes every divider as one vectorized whole-block pass
+outside them: bit-identical values (the dividers are elementwise; each
+element sees exactly the inputs and operation order of
+`repro.fixedpoint.teda_q._q_step_u`, the function `teda_q_scan_chan`
+scans over — the oracle this kernel is tested bit-exact against, for
+every `block_c`, since channels never exchange data).  The sequential
+critical path drops from four bit-serial divisions per sample to none,
+and each hoisted pass runs through the host-width exact image of the
+divider (`kernels/qdiv.py`): one integer divide plus FL restoring
+steps instead of 31+FL shift-subtract iterations, same bits.
 
 Layout contract (enforced by ops.py):
-  x: (T, C) int32 Q-values, T % block_t == 0, C % 128 == 0,
-  block_t % 8 == 0.  SMEM scalar: [msq1_q] int32.  The per-channel
-  counter offset `k0` and the per-channel valid length `vlen` are
-  (1, C) int32 carry rows (slots may sit at different stream positions
-  and retire different sample counts in one call; a uniform chunk is a
-  broadcast vlen).  Rows of channel c at global index >= vlen[c] are
-  masked: that channel's mean/var carries freeze, so the final-state
-  rows — always emitted as (1, C) outputs — are exact for every ragged
-  vlen vector, bit-for-bit with a per-channel isolated run.
+  x: (T, C) int32 Q-values, T % block_t == 0, C % block_c == 0,
+  block_t % 8 == 0, block_c % 128 == 0.  SMEM scalar: [msq1_q] int32.
+  The per-channel counter offset `k0` and the per-channel valid length
+  `vlen` are (1, C) int32 carry rows (slots may sit at different stream
+  positions and retire different sample counts in one call; a uniform
+  chunk is a broadcast vlen).  Rows of channel c at global index >=
+  vlen[c] are masked: that channel's mean/var carries freeze, so the
+  final-state rows — always emitted as (1, C) outputs, written once at
+  each strip's last time block — are exact for every ragged vlen
+  vector, bit-for-bit with a per-channel isolated run.
+
+Donation contract (wired by ops.py): `k0` aliases the in-kernel
+final-k output, `init_mean`/`init_var` alias the final mean/var rows,
+and the (T, C) Q-sample buffer `x` aliases the first (T, C) output —
+the call consumes its operands and allocates no fresh HBM for them.
+`vlen` is read by every grid step (the ragged mask) and has no output
+successor, so it is the one carry row left undonated.
+
+`verdict_only` drops the per-row mean/var outputs: the serving engine
+consumes only (ecc, outlier) + the final carries, and skipping two
+(T, C) int32 VMEM->HBM streams is a measured ~1.2x on the Q hot path
+(the matching wrapper-level win — not re-deriving the (T, C) bit-serial
+threshold the engine never reads — is in ops.teda_q_scan_verdict).
 """
 from __future__ import annotations
 
@@ -33,94 +68,195 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.fixedpoint.qformat import QFormat
-from repro.fixedpoint.teda_q import _q_counter_terms, _q_step_u
-from repro.kernels.teda_scan import tpu_compiler_params
+from repro.fixedpoint.qformat import QFormat, sat_add, sat_mul, sat_sub
+from repro.kernels.qdiv import fast_div_qi, fast_div_qq
+from repro.kernels.teda_scan import block_spec, tpu_compiler_params
 
 __all__ = ["teda_q_scan_kernel", "teda_q_pallas_call"]
 
 
 def teda_q_scan_kernel(scal_ref, x_ref, vlen_ref, init_k_ref,
-                       init_mean_ref, init_var_ref, mean_ref, var_ref,
-                       ecc_ref, outlier_ref, fmean_ref, fvar_ref,
-                       mean_carry, var_carry, *, block_t: int,
-                       fmt: QFormat):
-    i = pl.program_id(0)
+                       init_mean_ref, init_var_ref, *out_refs,
+                       block_t: int, fmt: QFormat,
+                       verdict_only: bool = False):
+    if verdict_only:
+        ecc_ref, outlier_ref, fk_ref, fmean_ref, fvar_ref = out_refs[:5]
+        mean_carry, var_carry, mean_scr, var_scr = out_refs[5:]
+        mean_ref = var_ref = None
+    else:
+        (mean_ref, var_ref, ecc_ref, outlier_ref, fk_ref, fmean_ref,
+         fvar_ref) = out_refs[:7]
+        mean_carry, var_carry, mean_scr, var_scr = out_refs[7:]
+    i = pl.program_id(1)  # time block (sequential, carry-chained)
 
+    # a new channel strip restarts the time sweep: re-seed its carries
     @pl.when(i == 0)
     def _init():
         mean_carry[...] = init_mean_ref[...]
         var_carry[...] = init_var_ref[...]
 
     msq1 = scal_ref[0]
-    vlen = vlen_ref[...]  # (1, C) int32 per-channel valid length
-    k0 = init_k_ref[...]  # (1, C) int32 per-channel counter offset
+    vlen = vlen_ref[...]  # (1, bc) int32 per-channel valid length
+    k0 = init_k_ref[...]  # (1, bc) int32 per-channel counter offset
+    xb = x_ref[...]       # (block_t, bc) int32 Q samples
 
-    # counter-only dividers for the whole chunk, vectorized over rows
-    # (one bit-serial pass instead of one per row; bit-identical values)
-    kv = (k0 + i * block_t + 1
-          + jax.lax.broadcasted_iota(jnp.int32, (block_t, 1), 0))
-    rk_b, inv_b, thr_b = _q_counter_terms(fmt, kv, msq1)
+    # the FPGA's counter register for every row of the block, plus the
+    # whole-block iteration index and ragged mask
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (block_t, 1), 0)
+    kv = k0 + i * block_t + 1 + row_iota     # (block_t, bc)
+    first_b = kv <= 1
+    valid_b = (i * block_t + row_iota) < vlen
 
-    def row(r, carry):
-        mean, var = carry  # (1, C) int32 Q
-        g = i * block_t + r            # global row index
-        k = k0 + g + 1                 # the FPGA's counter register, (1, C)
-        valid = g < vlen               # per-channel ragged mask, (1, C)
-        xr = x_ref[pl.ds(r, 1), :]
-        terms = tuple(jax.lax.dynamic_slice_in_dim(t, r, 1, 0)
-                      for t in (rk_b, inv_b, thr_b))
-        mean_n, var_n, ecc, _zeta, _thr, outl = _q_step_u(
-            fmt, k, mean, var, xr, msq1, terms=terms)
-        mean_ref[pl.ds(r, 1), :] = mean_n
-        var_ref[pl.ds(r, 1), :] = var_n
-        ecc_ref[pl.ds(r, 1), :] = ecc
-        outlier_ref[pl.ds(r, 1), :] = outl.astype(jnp.int8)
+    # every data-independent divider, vectorized over the whole block:
+    # the counter-only triple (rk = (k-1)/k, 1/k, thr = (m^2+1)/2k) of
+    # `_q_counter_terms` and the MEAN module's x/k (eq (2)) — computed
+    # through the host-width image of the bit-serial divider
+    # (kernels/qdiv.py), one whole-block pass each instead of one
+    # 31+FL-step division per row
+    rk_b = fast_div_qq(fmt, kv - 1, kv)
+    inv_b = fast_div_qi(fmt, jnp.broadcast_to(jnp.int32(fmt.one),
+                                              kv.shape), kv)
+    thr_b = fast_div_qi(fmt, jnp.broadcast_to(jnp.asarray(msq1,
+                                                          jnp.int32),
+                                              kv.shape), 2 * kv)
+    xk_b = fast_div_qi(fmt, xb, kv)
+
+    def _row(a, r):
+        return jax.lax.dynamic_slice_in_dim(a, r, 1, 0)
+
+    # MEAN recurrence, eq (2): mu = rk * mu + x/k — a bare saturating
+    # multiply-add per row, the MEAN module's accumulator register.  The
+    # k=1 override of `_q_mean_update` is bit-redundant here: at k=1,
+    # rk = div_qq(0, 1) = 0 and x/k = div_qi(x, 1) = x exactly (division
+    # by one is exact in the restoring divider, and x is in-format), so
+    # the multiply-add itself yields x.
+    def mean_row(r, mean):
+        mean_n = sat_add(fmt, sat_mul(fmt, _row(rk_b, r), mean),
+                         _row(xk_b, r))
+        mean_scr[pl.ds(r, 1), :] = mean_n
         # each channel's ragged tail must not advance its carried state
-        return (jnp.where(valid, mean_n, mean),
-                jnp.where(valid, var_n, var))
+        return jnp.where(_row(valid_b, r), mean_n, mean)
 
-    mean, var = jax.lax.fori_loop(
-        0, block_t, row, (mean_carry[...], var_carry[...]))
-    mean_carry[...] = mean
-    var_carry[...] = var
-    fmean_ref[...] = mean
-    fvar_ref[...] = var
+    mean_carry[...] = jax.lax.fori_loop(
+        0, block_t, mean_row, mean_carry[...])
+
+    # VARIANCE divider d2/k of eq (3): d2 = (x - mu_k)^2 is elementwise
+    # in the banked mean rows, so it — and its divider — leave the
+    # sequential path too.  The k=1 override (var resets to 0) is folded
+    # in by zeroing the divider term: rk = 0 at k=1 makes the
+    # multiply-add produce exactly 0.
+    mean_b = mean_scr[...]
+    d_b = sat_sub(fmt, xb, mean_b)
+    d2_b = sat_mul(fmt, d_b, d_b)
+    e_b = jnp.where(first_b, 0, fast_div_qi(fmt, d2_b, kv))
+    if not verdict_only:
+        mean_ref[...] = mean_b
+
+    # VARIANCE recurrence: var = rk * var + d2/k — the second
+    # accumulator register, again a bare multiply-add per row
+    def var_row(r, var):
+        var_n = sat_add(fmt, sat_mul(fmt, _row(rk_b, r), var),
+                        _row(e_b, r))
+        var_scr[pl.ds(r, 1), :] = var_n
+        return jnp.where(_row(valid_b, r), var_n, var)
+
+    var_carry[...] = jax.lax.fori_loop(0, block_t, var_row, var_carry[...])
+
+    # ECCENTRICITY + OUTLIER, eqs (1)(5)(6): pure per-row functions of
+    # the banked (d2, var) rows — the d2/var and ratio/k dividers run as
+    # single whole-block passes, bit-identical to `_q_post_d2` (the ops
+    # are elementwise; each element sees the same inputs in the same
+    # order).  The var>0 guard also covers first rows (var == 0 there).
+    var_b = var_scr[...]
+    safe = var_b > 0
+    ratio = fast_div_qq(fmt, d2_b, jnp.where(safe, var_b, 1))
+    ecc = sat_add(fmt, inv_b,
+                  jnp.where(safe, fast_div_qi(fmt, ratio, kv), 0))
+    ecc_ref[...] = ecc
+    outlier_ref[...] = (((ecc >> 1) > thr_b) & (kv >= 2)).astype(jnp.int8)
+    if not verdict_only:
+        var_ref[...] = var_b
+
+    # final-state rows written once, at the strip's last time block —
+    # required for the carry-row donation (init rows are read at i == 0,
+    # their aliased buffers overwritten only here), and one (1, C) HBM
+    # write per strip instead of one per block
+    @pl.when(i == pl.num_programs(1) - 1)
+    def _fin():
+        fk_ref[...] = k0 + vlen  # vlen pre-clamped to [0, T] by ops.py
+        fmean_ref[...] = mean_carry[...]
+        fvar_ref[...] = var_carry[...]
 
 
 def teda_q_pallas_call(x: jnp.ndarray, scal: jnp.ndarray,
                        vlen: jnp.ndarray, init_k: jnp.ndarray,
                        init_mean: jnp.ndarray, init_var: jnp.ndarray, *,
-                       fmt: QFormat, block_t: int, interpret: bool):
+                       fmt: QFormat, block_t: int, block_c: int = 0,
+                       interpret: bool, verdict_only: bool = False,
+                       donate: bool = True):
     """Raw pallas_call. x (T, C) int32 pre-padded; scal = [msq1] (1,);
     vlen / init_k / init_mean / init_var are (1, C) int32 carry rows —
-    vlen[c] is the number of leading valid rows of channel c (0..T).
+    vlen[c] is the number of leading valid rows of channel c (0..T,
+    already clamped).  `block_c` tiles the channel axis into independent
+    grid strips (0 means one strip spanning all C lanes — the 1-D grid).
 
-    Returns (mean, var, ecc, outlier, final_mean, final_var); the final
-    rows are always populated (each channel's state after its own
-    vlen[c] valid rows).
+    Returns (mean, var, ecc, outlier, fk, final_mean, final_var) or,
+    with verdict_only, (ecc, outlier, fk, final_mean, final_var); the
+    final rows are always populated (each channel's state after its own
+    vlen[c] valid rows; fk = k0 + vlen).  With `donate` the carry rows
+    and x alias the outputs — callers must treat the operands as
+    consumed.
     """
     t_len, c = x.shape
-    assert t_len % block_t == 0 and block_t % 8 == 0 and c % 128 == 0, (
-        "ops.py must pad: T % block_t == 0, block_t % 8 == 0, C % 128 == 0")
-    grid = (t_len // block_t,)
+    if not block_c:
+        block_c = c
+    assert (t_len % block_t == 0 and block_t % 8 == 0
+            and c % block_c == 0 and block_c % 128 == 0), (
+        "ops.py must pad: T % block_t == 0, block_t % 8 == 0, "
+        "C % block_c == 0, block_c % 128 == 0")
+    grid = (c // block_c, t_len // block_t)
 
-    row_spec = pl.BlockSpec((block_t, c), lambda i: (i, 0))
-    carry_spec = pl.BlockSpec((1, c), lambda i: (0, 0))
-    out_shape = [
-        jax.ShapeDtypeStruct((t_len, c), jnp.int32),  # mean (Q)
-        jax.ShapeDtypeStruct((t_len, c), jnp.int32),  # var (Q)
-        jax.ShapeDtypeStruct((t_len, c), jnp.int32),  # ecc (Q)
-        jax.ShapeDtypeStruct((t_len, c), jnp.int8),   # outlier flag
-        jax.ShapeDtypeStruct((1, c), jnp.int32),      # final mean (Q)
-        jax.ShapeDtypeStruct((1, c), jnp.int32),      # final var (Q)
+    row_spec = block_spec((block_t, block_c), lambda j, i: (i, j),
+                          memory_space=pltpu.VMEM)
+    carry_spec = block_spec((1, block_c), lambda j, i: (0, j),
+                            memory_space=pltpu.VMEM)
+    i32 = jnp.int32
+    final_shape = [
+        jax.ShapeDtypeStruct((1, c), i32),  # final k
+        jax.ShapeDtypeStruct((1, c), i32),  # final mean (Q)
+        jax.ShapeDtypeStruct((1, c), i32),  # final var (Q)
     ]
+    if verdict_only:
+        out_shape = [
+            jax.ShapeDtypeStruct((t_len, c), i32),       # ecc (Q)
+            jax.ShapeDtypeStruct((t_len, c), jnp.int8),  # outlier flag
+        ] + final_shape
+        out_specs = [row_spec, row_spec, carry_spec, carry_spec,
+                     carry_spec]
+    else:
+        out_shape = [
+            jax.ShapeDtypeStruct((t_len, c), i32),       # mean (Q)
+            jax.ShapeDtypeStruct((t_len, c), i32),       # var (Q)
+            jax.ShapeDtypeStruct((t_len, c), i32),       # ecc (Q)
+            jax.ShapeDtypeStruct((t_len, c), jnp.int8),  # outlier flag
+        ] + final_shape
+        out_specs = [row_spec, row_spec, row_spec, row_spec,
+                     carry_spec, carry_spec, carry_spec]
+    n_rows = 2 if verdict_only else 4
+    aliases = {}
+    if donate:
+        # k0 -> fk, init_mean -> fmean, init_var -> fvar; the consumed
+        # Q-sample buffer aliases the first (T, C) int32 output (vlen is
+        # read by every step — not donated)
+        aliases = {1: 0, 3: n_rows, 4: n_rows + 1, 5: n_rows + 2}
     kernel = functools.partial(teda_q_scan_kernel, block_t=block_t,
-                               fmt=fmt)
+                               fmt=fmt, verdict_only=verdict_only)
     compiler_params = None
     if not interpret:
         compiler_params = tpu_compiler_params(
-            dimension_semantics=("arbitrary",))  # sequential carry
+            # channel strips are independent (multi-core scaling); the
+            # time axis is the sequential carry chain
+            dimension_semantics=("parallel", "arbitrary"))
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -132,12 +268,14 @@ def teda_q_pallas_call(x: jnp.ndarray, scal: jnp.ndarray,
             carry_spec,  # init_mean
             carry_spec,  # init_var
         ],
-        out_specs=[row_spec, row_spec, row_spec, row_spec,
-                   carry_spec, carry_spec],
+        out_specs=out_specs,
         out_shape=out_shape,
+        input_output_aliases=aliases,
         scratch_shapes=[
-            pltpu.VMEM((1, c), jnp.int32),  # running mean carry
-            pltpu.VMEM((1, c), jnp.int32),  # running var carry
+            pltpu.VMEM((1, block_c), i32),        # running mean carry
+            pltpu.VMEM((1, block_c), i32),        # running var carry
+            pltpu.VMEM((block_t, block_c), i32),  # banked mean rows
+            pltpu.VMEM((block_t, block_c), i32),  # banked var rows
         ],
         compiler_params=compiler_params,
         interpret=interpret,

@@ -1,25 +1,44 @@
 """Pallas TPU kernel: chunked-scan TEDA over multichannel streams.
 
-TPU-native analog of the paper's FPGA pipeline (Fig. 1). The grid walks
-time-chunks sequentially — the Mosaic pipeline overlaps the HBM->VMEM DMA
-of chunk i+1 with compute on chunk i, which is exactly the role of the
-FPGA's inter-module pipeline registers. Within a chunk, log-depth
-Hillis-Steele doubling scans run over the sublane (time) axis, vectorized
-across the 128-lane channel axis, so every VPU "cycle" retires
-8x128 samples instead of the FPGA's 1.
+TPU-native analog of the paper's FPGA pipeline (Fig. 1). The grid is
+2-D `(channel-block, time-block)`: the minor (time) axis walks
+time-chunks sequentially — the Mosaic pipeline overlaps the HBM->VMEM
+DMA of chunk i+1 with compute on chunk i, which is exactly the role of
+the FPGA's inter-module pipeline registers — while the major axis tiles
+the channel lanes into independent `block_c`-wide strips.  Channels
+never exchange data, so the channel-block dimension is declared
+`parallel`: on a multi-core TPU Mosaic splits the strips across cores
+and a wide-C engine scales past a single core instead of serializing
+the whole lane extent through one.  Within a chunk, log-depth
+Hillis-Steele doubling scans run over the sublane (time) axis,
+vectorized across the 128-lane channel axis, so every VPU "cycle"
+retires 8x128 samples instead of the FPGA's 1.
 
 Layout contract (enforced by ops.py):
-  x: (T, C) with T % block_t == 0, C % 128 == 0, block_t % 8 == 0.
+  x: (T, C) with T % block_t == 0, C % block_c == 0,
+  block_t % 8 == 0, block_c % 128 == 0.
 Carried state (running sum, running variance per channel) lives in VMEM
-scratch across grid steps.  `m` arrives as an SMEM scalar; the
-per-channel iteration offset `k0` and the per-channel valid length
-`vlen` arrive as (1, C) carry rows, so every channel may sit at a
-different stream position *and* retire a different number of samples in
-one call (ragged multi-tenant slots; a uniform chunk is just a
-broadcast vlen).  Rows of channel c at global index >= vlen[c] are
-masked in-kernel (sum += 0; variance map = identity), so the final
-carries — always emitted as (1, C) outputs — hold each channel's state
-after exactly vlen[c] valid samples regardless of time padding.
+scratch — one (1, block_c) row per channel strip, re-initialized when
+the time axis restarts at the next strip.  `m` arrives as an SMEM
+scalar; the per-channel iteration offset `k0` and the per-channel valid
+length `vlen` arrive as (1, C) carry rows tiled per strip, so every
+channel may sit at a different stream position *and* retire a different
+number of samples in one call (ragged multi-tenant slots; a uniform
+chunk is just a broadcast vlen).  Rows of channel c at global index >=
+vlen[c] are masked in-kernel (sum += 0; variance map = identity), so
+the final carries — always emitted as (1, C) outputs, written once at
+each strip's last time block — hold each channel's state after exactly
+vlen[c] valid samples regardless of time padding.
+
+Donation contract (`input_output_aliases`, wired by ops.py): the
+k/sum/var carry-row inputs alias the final-state outputs (`k0` -> the
+in-kernel final-k row, `init_sum` -> final sum, `init_var` -> final
+var), and the (T, C) sample buffer `x` aliases the first (T, C) output
+when dtypes agree — the stream buffer is consumed by the call, so the
+kernel's HBM working set is the outputs alone.  Aliasing the carries is
+safe because they are only *read* at each strip's first time block and
+only *written* at its last; `vlen` is read by every grid step and has
+no output successor, so it is the one carry row that stays read-only.
 """
 from __future__ import annotations
 
@@ -44,6 +63,22 @@ def tpu_compiler_params(**kw):
     if cls is None:
         cls = pltpu.TPUCompilerParams
     return cls(**kw)
+
+
+def block_spec(shape, index_map, memory_space=None):
+    """Version-compatible BlockSpec with explicit memory-space placement.
+
+    Blocked operands live in VMEM (the compute-adjacent space the tile
+    sizes are budgeted against); older jax releases reject the
+    `memory_space` kwarg next to a block shape, so placement degrades
+    to the default on that side of the API.
+    """
+    if memory_space is None:
+        return pl.BlockSpec(shape, index_map)
+    try:
+        return pl.BlockSpec(shape, index_map, memory_space=memory_space)
+    except TypeError:  # old jax: block shape + memory space unsupported
+        return pl.BlockSpec(shape, index_map)
 
 
 def _shift_down(v: jnp.ndarray, d: int, fill: float) -> jnp.ndarray:
@@ -84,17 +119,18 @@ def teda_scan_kernel(scal_ref, x_ref, vlen_ref, init_k_ref, init_sum_ref,
                      init_var_ref, *out_refs, block_t: int,
                      verdict_only: bool = False):
     if verdict_only:
-        # slim outputs: (ecc, outlier, final_sum, final_var) — HBM write
+        # slim outputs: (ecc, outlier, final k/sum/var) — HBM write
         # traffic drops from 16B to ~5B per sample (see EXPERIMENTS §Perf)
-        ecc_ref, outlier_ref, fsum_ref, fvar_ref = out_refs[:4]
-        sum_carry, var_carry = out_refs[4:]
+        ecc_ref, outlier_ref, fk_ref, fsum_ref, fvar_ref = out_refs[:5]
+        sum_carry, var_carry = out_refs[5:]
         mean_ref = var_ref = None
     else:
-        (mean_ref, var_ref, ecc_ref, outlier_ref, fsum_ref,
-         fvar_ref) = out_refs[:6]
-        sum_carry, var_carry = out_refs[6:]
-    i = pl.program_id(0)
+        (mean_ref, var_ref, ecc_ref, outlier_ref, fk_ref, fsum_ref,
+         fvar_ref) = out_refs[:7]
+        sum_carry, var_carry = out_refs[7:]
+    i = pl.program_id(1)  # time block (sequential, carry-chained)
 
+    # a new channel strip restarts the time sweep: re-seed its carries
     @pl.when(i == 0)
     def _init():
         sum_carry[...] = init_sum_ref[...].astype(jnp.float32)
@@ -102,14 +138,14 @@ def teda_scan_kernel(scal_ref, x_ref, vlen_ref, init_k_ref, init_sum_ref,
 
     m = scal_ref[0]
 
-    x = x_ref[...].astype(jnp.float32)  # (bt, C)
+    x = x_ref[...].astype(jnp.float32)  # (bt, block_c)
     bt, c = x.shape
-    k0 = init_k_ref[...].astype(jnp.float32)  # (1, C) per-channel offset
-    vlen = vlen_ref[...].astype(jnp.float32)  # (1, C) per-channel length
+    k0 = init_k_ref[...].astype(jnp.float32)  # (1, bc) per-channel offset
+    vlen = vlen_ref[...].astype(jnp.float32)  # (1, bc) per-channel length
     t = jax.lax.broadcasted_iota(jnp.float32, (bt, 1), 0)
     g = i * block_t + t               # global row index, (bt, 1)
-    valid = g < vlen                  # ragged-tail mask, (bt, C)
-    k = k0 + g + 1.0                  # per-channel iteration index, (bt, C)
+    valid = g < vlen                  # ragged-tail mask, (bt, bc)
+    k = k0 + g + 1.0                  # per-channel iteration index, (bt, bc)
 
     # ---- MEAN module: eq (2) as a prefix sum ---------------------------
     # Invalid rows contribute nothing, so each channel's running sum
@@ -144,58 +180,90 @@ def teda_scan_kernel(scal_ref, x_ref, vlen_ref, init_k_ref, init_sum_ref,
         ecc_ref[...] = ecc
         outlier_ref[...] = outlier.astype(jnp.int32)
 
-    fsum_ref[...] = s[block_t - 1:block_t]
-    fvar_ref[...] = var[block_t - 1:block_t]
     sum_carry[...] = s[block_t - 1:block_t]
     var_carry[...] = var[block_t - 1:block_t]
+
+    # final-state rows are written once, at the strip's last time block —
+    # required for the carry-row donation (init rows are read at i == 0,
+    # their aliased buffers overwritten only here), and one (1, C) HBM
+    # write per strip instead of one per block
+    @pl.when(i == pl.num_programs(1) - 1)
+    def _fin():
+        fk_ref[...] = k0 + vlen  # vlen pre-clamped to [0, T] by ops.py
+        fsum_ref[...] = sum_carry[...]
+        fvar_ref[...] = var_carry[...]
 
 
 def teda_pallas_call(x: jnp.ndarray, scal: jnp.ndarray, vlen: jnp.ndarray,
                      init_k: jnp.ndarray, init_sum: jnp.ndarray,
                      init_var: jnp.ndarray, *, block_t: int,
-                     interpret: bool, verdict_only: bool = False):
+                     block_c: int = 0, interpret: bool,
+                     verdict_only: bool = False, donate: bool = True):
     """Raw pallas_call. x (T, C) pre-padded; scal = [m] f32 (1,);
     vlen / init_k / init_sum / init_var are (1, C) per-channel carry
     rows — vlen[c] is the number of leading rows of channel c that are
-    valid (0..T; a uniform chunk passes a broadcast T).
+    valid (0..T; a uniform chunk passes a broadcast T, already clamped
+    to [0, T]).  `block_c` tiles the channel axis into independent grid
+    strips (0 means one strip spanning all C lanes — the 1-D grid).
 
-    Returns (mean, var, ecc, outlier, final_sum, final_var) or, with
-    verdict_only, (ecc, outlier, final_sum, final_var).  The final
-    carries are always populated (each channel's state after its own
-    vlen[c] valid rows).
+    Returns (mean, var, ecc, outlier, fk, fsum, fvar) or, with
+    verdict_only, (ecc, outlier, fk, fsum, fvar).  The final rows are
+    always populated (each channel's state after its own vlen[c] valid
+    rows; fk = k0 + vlen).  With `donate` the carry rows (and x, when
+    its dtype matches the first row output) alias the outputs — callers
+    must treat the operands as consumed.
     """
     t_len, c = x.shape
-    assert t_len % block_t == 0 and block_t % 8 == 0 and c % 128 == 0, (
-        "ops.py must pad: T % block_t == 0, block_t % 8 == 0, C % 128 == 0")
-    grid = (t_len // block_t,)
+    if not block_c:
+        block_c = c
+    assert (t_len % block_t == 0 and block_t % 8 == 0
+            and c % block_c == 0 and block_c % 128 == 0), (
+        "ops.py must pad: T % block_t == 0, block_t % 8 == 0, "
+        "C % block_c == 0, block_c % 128 == 0")
+    grid = (c // block_c, t_len // block_t)
 
-    row_spec = pl.BlockSpec((block_t, c), lambda i: (i, 0))
-    carry_spec = pl.BlockSpec((1, c), lambda i: (0, 0))
+    row_spec = block_spec((block_t, block_c), lambda j, i: (i, j),
+                          memory_space=pltpu.VMEM)
+    carry_spec = block_spec((1, block_c), lambda j, i: (0, j),
+                            memory_space=pltpu.VMEM)
+    f32 = jnp.float32
+    final_shape = [
+        jax.ShapeDtypeStruct((1, c), f32),  # final k (= k0 + vlen)
+        jax.ShapeDtypeStruct((1, c), f32),  # final sum
+        jax.ShapeDtypeStruct((1, c), f32),  # final var
+    ]
     if verdict_only:
         out_shape = [
-            jax.ShapeDtypeStruct((t_len, c), jnp.float32),  # ecc
-            jax.ShapeDtypeStruct((t_len, c), jnp.int8),     # outlier
-            jax.ShapeDtypeStruct((1, c), jnp.float32),      # final sum
-            jax.ShapeDtypeStruct((1, c), jnp.float32),      # final var
-        ]
-        out_specs = [row_spec, row_spec, carry_spec, carry_spec]
+            jax.ShapeDtypeStruct((t_len, c), f32),      # ecc
+            jax.ShapeDtypeStruct((t_len, c), jnp.int8),  # outlier
+        ] + final_shape
+        out_specs = [row_spec, row_spec, carry_spec, carry_spec,
+                     carry_spec]
     else:
         out_shape = [
-            jax.ShapeDtypeStruct((t_len, c), jnp.float32),  # mean
-            jax.ShapeDtypeStruct((t_len, c), jnp.float32),  # var
-            jax.ShapeDtypeStruct((t_len, c), jnp.float32),  # ecc
-            jax.ShapeDtypeStruct((t_len, c), jnp.int32),    # outlier
-            jax.ShapeDtypeStruct((1, c), jnp.float32),      # final sum
-            jax.ShapeDtypeStruct((1, c), jnp.float32),      # final var
-        ]
+            jax.ShapeDtypeStruct((t_len, c), f32),        # mean
+            jax.ShapeDtypeStruct((t_len, c), f32),        # var
+            jax.ShapeDtypeStruct((t_len, c), f32),        # ecc
+            jax.ShapeDtypeStruct((t_len, c), jnp.int32),  # outlier
+        ] + final_shape
         out_specs = [row_spec, row_spec, row_spec, row_spec,
-                     carry_spec, carry_spec]
+                     carry_spec, carry_spec, carry_spec]
+    n_rows = 2 if verdict_only else 4
+    aliases = {}
+    if donate:
+        # carry-row donation: k0 -> fk, init_sum -> fsum, init_var ->
+        # fvar (inputs 3/4/5; vlen is read by every step — not donated)
+        aliases = {3: n_rows, 4: n_rows + 1, 5: n_rows + 2}
+        if x.dtype == out_shape[0].dtype:
+            aliases[1] = 0  # the stream buffer is consumed by the call
     kernel = functools.partial(teda_scan_kernel, block_t=block_t,
                                verdict_only=verdict_only)
     compiler_params = None
     if not interpret:
         compiler_params = tpu_compiler_params(
-            dimension_semantics=("arbitrary",))  # sequential carry
+            # channel strips are independent (multi-core scaling); the
+            # time axis is the sequential carry chain
+            dimension_semantics=("parallel", "arbitrary"))
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -210,9 +278,10 @@ def teda_pallas_call(x: jnp.ndarray, scal: jnp.ndarray, vlen: jnp.ndarray,
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=[
-            pltpu.VMEM((1, c), jnp.float32),  # running sum carry
-            pltpu.VMEM((1, c), jnp.float32),  # running var carry
+            pltpu.VMEM((1, block_c), f32),  # running sum carry
+            pltpu.VMEM((1, block_c), f32),  # running var carry
         ],
+        input_output_aliases=aliases,
         compiler_params=compiler_params,
         interpret=interpret,
     )(scal, x, vlen, init_k, init_sum, init_var)

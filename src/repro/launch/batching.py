@@ -31,6 +31,25 @@ Three scheduler-level optimisations ride on that fused call:
     `measure_latency=True` keeps the fully synchronous loop (block
     after every call) so per-call wall times stay honest.
 
+  * **Deep dispatch pipeline** — `pipeline_depth=d` keeps up to `d`
+    fused calls dispatched-but-unfetched at once.  Slots touched by a
+    still-in-flight call are *fenced* from re-dispatch (each slot sits
+    in at most one in-flight call, so its chunks are fetched in
+    dispatch order no matter when each call retires), which makes
+    retirement safely out-of-order: any in-flight call whose outputs
+    have already landed retires immediately, and the oldest call is
+    force-retired when the pipeline is full — or when every ready slot
+    is fenced, so a tick with work always dispatches.  Gateway-visible
+    results are bit-exact with depth 1 (chunk-exactness makes the
+    per-slot sample stream independent of how ticks partition it).
+    Depth beyond 1 pays off under staggered load — admission waves and
+    decode trickles touching disjoint slot sets — where successive
+    calls genuinely overlap on device; under uniform load every ready
+    slot is fenced by the previous call and the loop degrades
+    gracefully to the depth-1 double buffer.  `measure_latency=True`
+    overrides the pipeline (every call blocks at dispatch), keeping
+    wall times honest.
+
   * **Adaptive chunk_t** — when every ready slot is in decode phase
     (pending <= `decode_t`, default 1), the tick rides a short cached
     (decode_t, C) program instead of the full (chunk_t, C) one:
@@ -190,6 +209,21 @@ class _InFlight:
         self.sync_wall = sync_wall  # honest wall when measured sync
 
 
+def _host_ready(out) -> bool:
+    """True when a dispatched call's outputs have already landed (its
+    fetch would not block).  `jax.Array.is_ready` where available;
+    conservatively False otherwise — the depth bound still forces
+    retirement, so opportunism is an optimization, never a liveness
+    requirement."""
+    is_ready = getattr(out["outlier"], "is_ready", None)
+    if is_ready is None:
+        return False
+    try:
+        return bool(is_ready())
+    except Exception:
+        return False
+
+
 class BatchingScheduler:
     """Continuous batching of TEDA detection requests over a SlotPool.
 
@@ -213,6 +247,7 @@ class BatchingScheduler:
                  chunk_t: int = 32, decode_t: int = 1, m: float = 3.0,
                  queue_limit: int = 64, collect: bool = True,
                  measure_latency: bool = False,
+                 pipeline_depth: int = 1,
                  keep_finished: int = 1024,
                  call_log_len: int = 4096,
                  latency_log_len: int = 4096,
@@ -251,6 +286,13 @@ class BatchingScheduler:
         # every fused call) so per-call wall times are honest device
         # latencies; False runs the async double-buffered loop
         self.measure_latency = measure_latency
+        # pipeline_depth > 1 keeps several fused calls in flight with
+        # slot fencing + out-of-order retirement (see module docs);
+        # depth 1 is the PR 5 double buffer, bit-for-bit
+        self.pipeline_depth = int(pipeline_depth)
+        if self.pipeline_depth < 1:
+            raise ValueError(
+                f"pipeline_depth must be >= 1, got {pipeline_depth}")
         # retention caps: a forever-running gateway must not accumulate
         # per-request records without bound.  The oldest finished
         # requests (results + telemetry; their rid becomes reusable)
@@ -621,15 +663,43 @@ class BatchingScheduler:
         # overlap with the previous tick's in-flight device compute
         self._admit(events)
         ready = [r for r in self.runs.values() if r.avail > 0]
-        if ready:
+        deep = self.pipeline_depth > 1 and not self.measure_latency
+        if deep and ready:
+            # fence: a slot in a still-in-flight call cannot join a new
+            # one (its chunks must be fetched in dispatch order).  When
+            # every ready slot is fenced, force-retire oldest calls
+            # until one frees up — a tick with work always dispatches.
+            def _free():
+                fenced = {s for i in self._inflight
+                          for _, s, _ in i.members}
+                return [r for r in ready if r.slot not in fenced]
+            free = _free()
+            while not free and self._inflight:
+                self._retire(self._inflight.popleft(), events)
+                free = _free()
+            if free:
+                self._dispatch(free)
+        elif ready:
             self._dispatch(ready)
-        # retire everything dispatched *before* this tick; this tick's
-        # call stays in flight across the tick boundary (the double
-        # buffer) unless the loop is synchronous
-        while self._inflight and (
-                self.measure_latency
-                or self._inflight[0].tick < self.tick_no):
-            self._retire(self._inflight.popleft(), events)
+        if deep:
+            # out-of-order retirement: calls whose outputs already
+            # landed on host retire now, whatever their dispatch order
+            # (fencing makes per-slot order immune to it); then the
+            # oldest calls retire until the pipeline fits its depth
+            for inf in [i for i in self._inflight
+                        if _host_ready(i.out)]:
+                self._inflight.remove(inf)
+                self._retire(inf, events)
+            while len(self._inflight) > self.pipeline_depth:
+                self._retire(self._inflight.popleft(), events)
+        else:
+            # retire everything dispatched *before* this tick; this
+            # tick's call stays in flight across the tick boundary (the
+            # double buffer) unless the loop is synchronous
+            while self._inflight and (
+                    self.measure_latency
+                    or self._inflight[0].tick < self.tick_no):
+                self._retire(self._inflight.popleft(), events)
 
         done = [rid for rid, r in self.runs.items()
                 if r.req.closed and r.avail == 0]
@@ -784,6 +854,7 @@ class BatchingScheduler:
                 "running": len(self.runs), "queued": self.queued_total,
                 "rejected_submits": self.rejected,
                 "inflight_calls": len(self._inflight),
+                "pipeline_depth": self.pipeline_depth,
                 "short_ticks": self.short_ticks,
                 "chunk_latency": lat, "classes": classes,
                 "programs": self.pool.programs(),

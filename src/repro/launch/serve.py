@@ -77,7 +77,13 @@ def serve_streams(streams: Sequence[tuple],
     With `measure_latency=False` the scheduler runs its async
     double-buffered loop (host bookkeeping overlapped with device
     compute); True keeps the synchronous loop so per-chunk wall times
-    are honest latencies.
+    are honest latencies.  `pipeline_depth` (via `engine_opts`) keeps
+    up to that many fused calls in flight with slot fencing —
+    gateway results stay bit-exact with depth 1, but
+    `measure_latency=True` overrides it back to the synchronous loop,
+    so depth and honest per-call latencies are mutually exclusive
+    knobs.  `block_c` (also via `engine_opts`) tiles the kernel grid's
+    channel axis for multi-core TPU scaling at wide capacities.
 
     Observability (`repro.obs`): `registry`/`tracer` pass through to
     the scheduler (and down to pool + engines); `on_event` is a
@@ -327,6 +333,12 @@ def main(argv=None):
     ap.add_argument("--arrivals-per-tick", type=int, default=None)
     ap.add_argument("--decode-t", type=int, default=1,
                     help="short program length for decode-only ticks")
+    ap.add_argument("--pipeline-depth", type=int, default=1,
+                    help="in-flight fused calls (>1 runs the async "
+                         "loop: latency measurement switches off)")
+    ap.add_argument("--block-c", type=int, default=None,
+                    help="channel-block width of the kernel grid "
+                         "(multiple of 128; default: one strip)")
     args = ap.parse_args(argv)
 
     fmt = None
@@ -339,6 +351,10 @@ def main(argv=None):
             _demo_streams(args.requests, args.history, args.live),
             backend=args.backend, chunk_t=args.chunk_t, fmt=fmt,
             decode_t=args.decode_t,
+            pipeline_depth=args.pipeline_depth,
+            block_c=args.block_c,
+            # depth > 1 only pipelines in the async loop
+            measure_latency=args.pipeline_depth <= 1,
             class_weights={"latency": 4.0, "bulk": 1.0},
             arrivals_per_tick=args.arrivals_per_tick)
         lat = res["chunk_latency"]

@@ -544,3 +544,138 @@ def test_pool_per_tenant_m_survives_resize():
     pool.acquire(2, m=1.25)
     pool.acquire(1, m=9.0)                 # grows to bucket 4
     assert pool.engine.slot_m.tolist() == [1.25, 1.25, 9.0, 3.0]
+
+
+# ------------------------------------------- deep pipeline (pipeline_depth)
+def _run_depth(depth, specs, prios=None, backend="pallas-q",
+               check_fence=False, **kw):
+    """Serve `specs` interleaved at a given pipeline depth; optionally
+    assert the fencing invariant (a slot in at most one in-flight call)
+    after every tick."""
+    sched = _mk_sched(backend, pipeline_depth=depth, **kw)
+    order = list(specs)
+    fed = {rid: 0 for rid in specs}
+    closed = set()
+    for tick in range(800):
+        if tick < len(order):
+            rid = order[tick]
+            h, live, m = specs[rid]
+            prio = (prios or {}).get(rid, "default")
+            assert sched.submit(Request(rid, h, m=m, priority=prio))
+            if not live.size:
+                sched.close(rid)
+                closed.add(rid)
+        for rid, (h, live, m) in specs.items():
+            if rid not in sched.stats_by_rid or rid in closed:
+                continue
+            if fed[rid] < live.size:
+                sched.feed(rid, live[fed[rid]:fed[rid] + 1])
+                fed[rid] += 1
+            if fed[rid] == live.size:
+                sched.close(rid)
+                closed.add(rid)
+        sched.step()
+        if check_fence:
+            slots = [s for inf in sched._inflight
+                     for _, s, _ in inf.members]
+            assert len(slots) == len(set(slots)), \
+                f"slot fenced twice in flight at tick {tick}: {slots}"
+            assert len(sched._inflight) <= depth + 1
+        if sched.completed == len(specs):
+            return sched
+    raise AssertionError("did not drain")
+
+
+@pytest.mark.parametrize("depth", [2, 4])
+def test_pipeline_depth_bit_exact_with_depth_1(depth):
+    """Acceptance (ISSUE 7): depth-2/4 pipelines are bit-exact with
+    depth 1 at the gateway level on the Q path — fencing keeps each
+    slot's chunks in dispatch order, and chunk-exactness makes the
+    per-request sample stream independent of tick partitioning."""
+    specs = _workload(6, seed=23)
+    prios = {rid: ("latency" if i % 2 else "bulk")
+             for i, rid in enumerate(specs)}
+    base = _run_depth(1, specs, prios,
+                      class_weights={"latency": 3.0, "bulk": 1.0})
+    deep = _run_depth(depth, specs, prios, check_fence=True,
+                      class_weights={"latency": 3.0, "bulk": 1.0})
+    for rid in specs:
+        rb, rd = base.results(rid), deep.results(rid)
+        np.testing.assert_array_equal(rb["ecc"], rd["ecc"], err_msg=rid)
+        np.testing.assert_array_equal(rb["outlier"], rd["outlier"],
+                                      err_msg=rid)
+        tb, td = base.telemetry(rid), deep.telemetry(rid)
+        assert (tb.samples, tb.flags) == (td.samples, td.flags)
+
+
+def test_pipeline_fencing_under_slot_churn():
+    """Attach/detach churn: completed requests release slots that new
+    requests immediately recycle while older calls may still be in
+    flight.  The fencing invariant must hold every tick and results
+    must stay bit-exact with the depth-1 loop."""
+    rng = np.random.default_rng(31)
+    specs = {}
+    for i in range(10):  # > 2x pool capacity: constant recycling
+        h = rng.normal(size=(int(rng.integers(1, 12)),)).astype(
+            np.float32)
+        live = rng.normal(size=(int(rng.integers(0, 4)),)).astype(
+            np.float32)
+        specs[f"c{i}"] = (h, live, 3.0)
+    base = _run_depth(1, specs)
+    deep = _run_depth(4, specs, check_fence=True)
+    for rid in specs:
+        np.testing.assert_array_equal(base.results(rid)["outlier"],
+                                      deep.results(rid)["outlier"],
+                                      err_msg=rid)
+        np.testing.assert_array_equal(base.results(rid)["ecc"],
+                                      deep.results(rid)["ecc"],
+                                      err_msg=rid)
+
+
+def test_pipeline_programs_flat_after_warmup():
+    """Depth > 1 must not defeat the program cache: after the first
+    full+short programs compile, further ticks add no new (capacity, t)
+    entries."""
+    sched = _mk_sched("scan", chunk_t=4, pipeline_depth=3)
+    rng = np.random.default_rng(5)
+    for i in range(3):
+        sched.submit(Request(
+            f"w{i}", rng.normal(size=(9,)).astype(np.float32)))
+    for _ in range(6):  # warmup: chunk + decode programs both exercised
+        sched.step()
+    warm = set(sched.stats()["programs"])
+    for i in range(3):
+        sched.feed(f"w{i}", rng.normal(size=(3,)).astype(np.float32))
+        sched.close(f"w{i}")
+    sched.drain()
+    assert set(sched.stats()["programs"]) == warm
+    assert sched.stats()["pipeline_depth"] == 3
+
+
+def test_pipeline_depth_validation_and_latency_override():
+    with pytest.raises(ValueError):
+        _mk_sched("scan", pipeline_depth=0)
+    # measure_latency=True overrides the pipeline: every call retires
+    # synchronously within its own tick, so nothing stays in flight
+    sched = _mk_sched("scan", pipeline_depth=4, measure_latency=True)
+    sched.submit(Request("a", np.ones((20,), np.float32)))
+    for _ in range(4):
+        sched.step()
+        assert sched.stats()["inflight_calls"] == 0
+    assert all(c["sync"] for c in sched.call_log)
+
+
+def test_pipeline_depth_bounds_inflight_queue():
+    """A depth-d scheduler never holds more than d dispatched calls
+    after a tick completes (the depth cap is enforced even when
+    opportunistic retirement finds nothing ready)."""
+    sched = _mk_sched("scan", chunk_t=2, pipeline_depth=2)
+    rng = np.random.default_rng(11)
+    for i in range(4):
+        sched.submit(Request(
+            f"b{i}", rng.normal(size=(20,)).astype(np.float32)))
+        sched.close(f"b{i}")
+    while sched.runs or sched.queued_total:
+        sched.step()
+        assert len(sched._inflight) <= 2
+    sched._flush()

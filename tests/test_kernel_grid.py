@@ -1,0 +1,162 @@
+"""2-D (channel-block, time) kernel grid: block_c must never change bits.
+
+Channel strips are independent by construction (no cross-channel data
+flow), so every `block_c` — including widths that force channel
+padding, the degenerate C == 1, and block_c == C (one strip, the 1-D
+grid) — must reproduce the single-strip result exactly: bit-for-bit on
+the integer path (vs the `teda_q_scan_chan` oracle) and exactly equal
+arrays on the float path (same program, different tiling).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.teda import TedaState
+from repro.fixedpoint import QFormat, teda_q_scan_chan
+from repro.kernels.ops import (teda_q_scan_tpu, teda_q_scan_verdict,
+                               teda_scan_tpu, teda_scan_verdict)
+
+FMT = QFormat(32, 20)
+
+
+def _x(t, c, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(t, c)).astype(np.float32)
+
+
+def _q(x):
+    return jnp.asarray(np.asarray(FMT.quantize(x)))
+
+
+# ------------------------------------------------- Q path: bit-exactness
+@pytest.mark.parametrize("c,block_c", [
+    (200, 128),   # C % block_c != 0 (wrapper pads to 256)
+    (1, 128),     # degenerate C=1 (pads to one lane tile)
+    (256, 256),   # block_c == padded C: one strip == the 1-D grid
+    (300, 128),   # padded C = 384, three strips
+])
+def test_q_block_c_bit_exact_vs_oracle(c, block_c):
+    xq = _q(_x(96, c, seed=c))
+    (fk, fm, fv), oro = teda_q_scan_chan(xq, FMT, m=3.0)
+    st, out = teda_q_scan_tpu(xq, FMT, m=3.0, block_t=32,
+                              block_c=block_c, interpret=True)
+    for key in ("mean", "var", "ecc", "outlier"):
+        np.testing.assert_array_equal(np.asarray(out[key]),
+                                      np.asarray(oro[key]), err_msg=key)
+    np.testing.assert_array_equal(np.asarray(st.k), np.asarray(fk))
+    np.testing.assert_array_equal(np.asarray(st.mean[:, 0]),
+                                  np.asarray(fm))
+    np.testing.assert_array_equal(np.asarray(st.var), np.asarray(fv))
+
+
+@pytest.mark.parametrize("block_c", [None, 128, 256])
+def test_q_verdict_equals_full_every_block_c(block_c):
+    xq = _q(_x(64, 200, seed=3))
+    stf, outf = teda_q_scan_tpu(xq, FMT, m=3.0, block_t=32,
+                                block_c=block_c, interpret=True)
+    stv, outv = teda_q_scan_verdict(xq, FMT, m=3.0, block_t=32,
+                                    block_c=block_c, interpret=True)
+    np.testing.assert_array_equal(np.asarray(outv["ecc"]),
+                                  np.asarray(outf["ecc"]))
+    np.testing.assert_array_equal(np.asarray(outv["outlier"]),
+                                  np.asarray(outf["outlier"]))
+    np.testing.assert_array_equal(np.asarray(stv.k), np.asarray(stf.k))
+    np.testing.assert_array_equal(np.asarray(stv.mean),
+                                  np.asarray(stf.mean))
+    np.testing.assert_array_equal(np.asarray(stv.var),
+                                  np.asarray(stf.var))
+
+
+@pytest.mark.parametrize("block_c", [128, 256])
+def test_q_ragged_vlens_cross_channel_blocks(block_c):
+    """Per-channel ragged lengths x channel strips: every channel's
+    valid prefix and final state must match its isolated oracle run."""
+    t, c = 64, 200
+    xq = np.asarray(_q(_x(t, c, seed=9)))
+    rng = np.random.default_rng(17)
+    vl = rng.integers(0, t + 1, size=c).astype(np.int32)
+    k0 = rng.integers(0, 40, size=c).astype(np.int32)
+    m0 = np.asarray(FMT.quantize(rng.normal(size=c).astype(np.float32)))
+    v0 = np.abs(np.asarray(FMT.quantize(
+        rng.uniform(0.1, 2.0, size=c).astype(np.float32))))
+    st0 = TedaState(k=jnp.asarray(k0), mean=jnp.asarray(m0)[:, None],
+                    var=jnp.asarray(v0))
+
+    st, out = teda_q_scan_verdict(jnp.asarray(xq), FMT, m=3.0,
+                                  block_t=32, block_c=block_c,
+                                  interpret=True, state=st0,
+                                  valid_lens=jnp.asarray(vl))
+    ecc = np.asarray(out["ecc"])
+    flags = np.asarray(out["outlier"]).astype(bool)
+    for ch in range(0, c, 17):  # sampled channels, incl. strip edges
+        n = int(vl[ch])
+        if n == 0:
+            assert int(st.k[ch]) == int(k0[ch])
+            assert int(st.var[ch]) == int(v0[ch])
+            assert not flags[:, ch].any()
+            continue
+        (fkc, fmc, fvc), oc = teda_q_scan_chan(
+            jnp.asarray(xq[:n, ch:ch + 1]), FMT, m=3.0, k0=int(k0[ch]),
+            mean0=jnp.asarray(m0[ch:ch + 1]),
+            var0=jnp.asarray(v0[ch:ch + 1]))
+        np.testing.assert_array_equal(ecc[:n, ch],
+                                      np.asarray(oc["ecc"])[:, 0])
+        np.testing.assert_array_equal(flags[:n, ch],
+                                      np.asarray(oc["outlier"])[:, 0])
+        assert not flags[n:, ch].any()  # no flags past vlen
+        assert int(st.k[ch]) == int(fkc[0])
+        assert int(st.mean[ch, 0]) == int(fmc[0])
+        assert int(st.var[ch]) == int(fvc[0])
+
+
+def test_q_chunked_state_carry_with_block_c():
+    xq = _q(_x(96, 140, seed=5))
+    _, oro = teda_q_scan_chan(xq, FMT, m=3.0)
+    st, o1 = teda_q_scan_tpu(xq[:48], FMT, m=3.0, block_t=16,
+                             block_c=128, interpret=True)
+    _, o2 = teda_q_scan_tpu(xq[48:], FMT, m=3.0, block_t=16,
+                            block_c=128, interpret=True, state=st)
+    ecc = np.concatenate([np.asarray(o1["ecc"]), np.asarray(o2["ecc"])])
+    np.testing.assert_array_equal(ecc, np.asarray(oro["ecc"]))
+
+
+def test_q_invalid_block_c_rejected():
+    xq = _q(_x(32, 8, seed=1))
+    with pytest.raises(ValueError):
+        teda_q_scan_tpu(xq, FMT, m=3.0, block_t=8, block_c=100,
+                        interpret=True)
+
+
+# ------------------------------------------ float path: tiling invariance
+@pytest.mark.parametrize("c,block_c", [(200, 128), (1, 128), (256, 256),
+                                       (300, 128)])
+def test_float_block_c_matches_single_strip(c, block_c):
+    x = jnp.asarray(_x(96, c, seed=c + 1))
+    fin1, out1 = teda_scan_tpu(x, 3.0, block_t=32, interpret=True)
+    fin2, out2 = teda_scan_tpu(x, 3.0, block_t=32, block_c=block_c,
+                               interpret=True)
+    for key in ("mean", "var", "ecc", "outlier"):
+        np.testing.assert_array_equal(np.asarray(out1[key]),
+                                      np.asarray(out2[key]), err_msg=key)
+    np.testing.assert_array_equal(np.asarray(fin1.var),
+                                  np.asarray(fin2.var))
+
+
+@pytest.mark.parametrize("block_c", [None, 128])
+def test_float_verdict_ragged_with_block_c(block_c):
+    t, c = 64, 150
+    x = _x(t, c, seed=21)
+    vl = np.random.default_rng(2).integers(0, t + 1,
+                                           size=c).astype(np.int32)
+    fin1, out1 = teda_scan_verdict(jnp.asarray(x), 3.0, block_t=32,
+                                   interpret=True,
+                                   valid_lens=jnp.asarray(vl))
+    fin2, out2 = teda_scan_verdict(jnp.asarray(x), 3.0, block_t=32,
+                                   block_c=block_c, interpret=True,
+                                   valid_lens=jnp.asarray(vl))
+    np.testing.assert_array_equal(np.asarray(out1["outlier"]),
+                                  np.asarray(out2["outlier"]))
+    np.testing.assert_array_equal(np.asarray(fin1.k),
+                                  np.asarray(fin2.k))
+    np.testing.assert_array_equal(np.asarray(fin1.var),
+                                  np.asarray(fin2.var))

@@ -158,9 +158,9 @@ def test_verdict_only_matches_numpy_oracle():
     scal = jnp.asarray([3.0], jnp.float32)
     vlen = jnp.full((1, 128), float(x.shape[0]), jnp.float32)
     zero = jnp.zeros((1, 128), jnp.float32)
-    _, flag8, _, _ = teda_pallas_call(xp, scal, vlen, zero, zero, zero,
-                                      block_t=64, interpret=True,
-                                      verdict_only=True)
+    _, flag8, _, _, _ = teda_pallas_call(xp, scal, vlen, zero, zero, zero,
+                                         block_t=64, interpret=True,
+                                         verdict_only=True)
     assert flag8.dtype == jnp.int8
     np.testing.assert_array_equal(np.asarray(flag8[:, :3]).astype(bool),
                                   ref["outlier"])
