@@ -1,0 +1,147 @@
+"""Fused detector-ensemble throughput: the composability overhead.
+
+The fSEAD line of work composes several streaming detectors behind one
+serving interface; the cost question is what the fused K-detector
+kernel pays over a single-detector engine.  This benchmark measures
+`StreamEngine(backend="ensemble")` samples/s for each ensemble member
+alone (K=1) and for the full fused ensemble (K=3, majority vote) on
+the same stream, and reports the K=3 overhead factor — single-detector
+samples/s over fused samples/s (1.0 = free composability; the CI gate
+asserts it stays under `MAX_K3_OVERHEAD`, since the fused kernel
+shares the prefix-sum fabric across members and should never cost
+anywhere near K times a single detector).
+
+Emits a JSON table (one row per detector selection x chunk size):
+
+    PYTHONPATH=src python benchmarks/bench_ensemble.py
+    PYTHONPATH=src python benchmarks/bench_ensemble.py --smoke  # CI: tiny
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.detectors import DEFAULT_DETECTORS
+from repro.engine import StreamEngine
+
+# acceptance ceiling for the fused-vs-single overhead factor: the K=3
+# ensemble must stay cheaper than 2.5x a single detector per sample
+MAX_K3_OVERHEAD = 2.5
+
+
+def bench_one(detectors, channels: int, chunk_t: int, total_t: int, *,
+              vote: str = "majority", block_t: int, interpret,
+              reps: int = 3):
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(total_t, channels)).astype(np.float32)
+    chunks = [x[i:i + chunk_t] for i in range(0, total_t, chunk_t)]
+    eng = StreamEngine(channels, "ensemble", m=3.0,
+                       detectors=tuple(detectors), vote=vote,
+                       block_t=block_t, interpret=interpret)
+
+    def run():
+        eng.reset()  # mid-flight slot recycle; keeps the jit cache warm
+        out = None
+        for c in chunks:
+            out = eng.process(c)
+        jax.block_until_ready(out["outlier"])
+
+    t0 = time.perf_counter()
+    run()  # compile + warm caches
+    compile_s = time.perf_counter() - t0
+
+    walls = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        run()
+        walls.append(time.perf_counter() - t0)
+    # best-of-N: the least-interfered run estimates the kernel's cost;
+    # medians under host load spikes flake the 25% regression gate
+    wall = float(np.min(walls))
+    samples = total_t * channels
+    assert int(eng.samples_seen[0]) == total_t
+    return {
+        "backend": "ensemble",
+        "detector": "+".join(detectors),
+        "ensemble_k": len(detectors),
+        "vote": vote,
+        "chunk_t": chunk_t,
+        "channels": channels,
+        "samples": samples,
+        "wall_s": wall,
+        "samples_per_s": samples / wall,
+        "compile_s": compile_s,
+    }
+
+
+def run(channels: int, chunk_sizes, total_t: int, *, block_t: int = 256,
+        interpret=None, reps: int = 3):
+    rows = []
+    for chunk_t in chunk_sizes:
+        bt = min(block_t, max(8, chunk_t))
+        singles = []
+        for det in DEFAULT_DETECTORS:
+            row = bench_one((det,), channels, chunk_t, total_t,
+                            block_t=bt, interpret=interpret, reps=reps)
+            singles.append(row["samples_per_s"])
+            rows.append(row)
+        fused = bench_one(DEFAULT_DETECTORS, channels, chunk_t, total_t,
+                          block_t=bt, interpret=interpret, reps=reps)
+        # overhead vs the mean single detector: one noisy single-run
+        # outlier must not swing the acceptance ratio
+        fused["overhead_vs_single"] = (
+            float(np.mean(singles)) / fused["samples_per_s"])
+        rows.append(fused)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--channels", type=int, default=128)
+    ap.add_argument("--total-t", type=int, default=16384)
+    ap.add_argument("--chunks", default="256,1024",
+                    help="comma-separated chunk lengths")
+    ap.add_argument("--block-t", type=int, default=256)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--out", default=None, help="write JSON here")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes + interpret mode (CI rot guard)")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        # big enough that each timed interval is tens of ms (best of
+        # 5 reps): the regression gate compares samples/s against a
+        # committed baseline, so the measurement must beat timer noise
+        channels, total_t, chunks, reps = 8, 2048, [32], 5
+        interpret = True
+    else:
+        channels, total_t, reps = args.channels, args.total_t, args.reps
+        chunks = [int(s) for s in args.chunks.split(",")]
+        interpret = None
+
+    rows = run(channels, chunks, total_t, block_t=args.block_t,
+               interpret=interpret, reps=reps)
+    worst = max(r["overhead_vs_single"] for r in rows
+                if "overhead_vs_single" in r)
+    doc = {"bench": "ensemble_throughput", "smoke": bool(args.smoke),
+           "max_k3_overhead": MAX_K3_OVERHEAD,
+           "worst_k3_overhead": worst, "rows": rows}
+    text = json.dumps(doc, indent=2)
+    print(text)
+    if worst >= MAX_K3_OVERHEAD:
+        raise SystemExit(
+            f"fused K={len(DEFAULT_DETECTORS)} ensemble overhead "
+            f"x{worst:.2f} vs single detector exceeds the "
+            f"x{MAX_K3_OVERHEAD} acceptance ceiling")
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    return doc
+
+
+if __name__ == "__main__":
+    main()

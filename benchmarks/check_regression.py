@@ -36,7 +36,7 @@ import sys
 # row fields that identify a configuration (everything else is measured)
 ID_KEYS = ("bench", "backend", "chunk_t", "decode_t", "offered_load",
            "shape", "channels", "block_t", "block_c", "outputs",
-           "pipeline_depth")
+           "pipeline_depth", "detector", "ensemble_k", "vote")
 METRIC = "samples_per_s"
 
 
@@ -148,15 +148,25 @@ def write_explain(path, sections, threshold: float) -> None:
         if sec["error"]:
             lines += [f"**MALFORMED / MISSING:** {sec['error']}", ""]
             continue
-        lines += ["| configuration | baseline | current | ratio "
-                  "| verdict |",
-                  "|---|---:|---:|---:|---|"]
+        # detector-matrix benches get one table per detector (rows
+        # without a detector key share the trailing group) so the
+        # conformance grid reads as a grid, not an interleaved list
+        groups: dict = {}
         for r in sec["results"]:
-            verdict = "ok" if r["ok"] else "**FAIL**"
-            lines.append(
-                f"| {_ident_str(r['id'])} | {r['baseline']:.1f} "
-                f"| {r['current']:.1f} | {r['ratio']:.3f} | {verdict} |")
-        lines.append("")
+            groups.setdefault(r["id"].get("detector"), []).append(r)
+        for det in sorted(groups, key=lambda d: (d is None, d)):
+            if len(groups) > 1 and det is not None:
+                lines += [f"### detector: {det}", ""]
+            lines += ["| configuration | baseline | current | ratio "
+                      "| verdict |",
+                      "|---|---:|---:|---:|---|"]
+            for r in groups[det]:
+                verdict = "ok" if r["ok"] else "**FAIL**"
+                lines.append(
+                    f"| {_ident_str(r['id'])} | {r['baseline']:.1f} "
+                    f"| {r['current']:.1f} | {r['ratio']:.3f} "
+                    f"| {verdict} |")
+            lines.append("")
         for r in sec["results"]:
             if not r.get("metrics"):
                 continue

@@ -13,11 +13,15 @@ that `check_regression.py` gates in CI:
   serving     -> bench_serving     (continuous batching vs offered load)
   kernel_grid -> bench_kernel_grid (block_c x block_t x output contract
                                     at wide C — the 7.2 MSPS push)
+  ensemble    -> bench_ensemble    (fused K-detector kernel vs the
+                                    single-detector engine: the
+                                    composability overhead)
 
 Their output is validated here — empty or malformed rows exit nonzero,
 so the CI perf gate can never silently pass on a benchmark that ran
-nothing.  ``--only NAME`` runs a single benchmark; ``--smoke`` and
-``--out-dir`` forward to the JSON benchmarks.
+nothing.  ``--only NAME`` (a name, or a comma-separated list of names)
+runs a subset; unknown names exit nonzero listing the valid ones.
+``--smoke`` and ``--out-dir`` forward to the JSON benchmarks.
 
 ``--only roofline`` emits the *analytic* TEDA-kernel roofline
 (``roofline.py --teda``): no samples/s measurement, so it gets its own
@@ -39,7 +43,7 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
 
 CSV_BENCHES = ("detection", "occupation", "throughput", "platforms",
                "bitaccurate")
-JSON_BENCHES = ("engine", "serving", "kernel_grid")
+JSON_BENCHES = ("engine", "serving", "kernel_grid", "ensemble")
 ANALYTIC_BENCHES = ("roofline",)
 
 
@@ -124,8 +128,8 @@ def _run_roofline(smoke: bool, out_dir) -> bool:
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    choices=CSV_BENCHES + JSON_BENCHES + ANALYTIC_BENCHES,
-                    help="run a single benchmark")
+                    help="run a subset: a benchmark name or a "
+                         "comma-separated list of names")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes for the JSON benchmarks (CI)")
     ap.add_argument("--out-dir", default=None,
@@ -136,8 +140,17 @@ def main(argv=None) -> None:
                          "heavy off-TPU unless --smoke)")
     args = ap.parse_args(argv)
 
+    valid = CSV_BENCHES + JSON_BENCHES + ANALYTIC_BENCHES
     if args.only:
-        names = (args.only,)
+        # a name or a comma-separated list; unknown names must exit
+        # nonzero *listing the valid set* — argparse choices= would,
+        # but could not take the list form
+        names = tuple(n.strip() for n in args.only.split(",") if n.strip())
+        unknown = [n for n in names if n not in valid]
+        if unknown or not names:
+            raise SystemExit(
+                f"--only: unknown benchmark(s) {unknown or args.only!r}; "
+                f"valid names: {', '.join(valid)}")
     else:
         names = CSV_BENCHES + (JSON_BENCHES if args.all else ())
     failed = []

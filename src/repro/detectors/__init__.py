@@ -1,0 +1,105 @@
+"""Composable streaming anomaly detectors behind one state-carry contract.
+
+fSEAD's FPGA-streaming result (PAPERS.md) is that the win comes from
+*composable* ensembles of detectors sharing one streaming fabric, and
+the runtime-efficacy survey (Choudhary et al.) shows no single detector
+dominates across stream shapes.  This package is that composability for
+the repro's serving stack: K detectors evaluated per channel in ONE
+fused Pallas call (`kernels/ensemble_scan.py`), selected per slot at
+`attach(detectors=...)`, fused into a verdict by majority/weighted
+vote.
+
+Every detector speaks the engine's contract — (T, C) chunks of C
+independent univariate channel streams, per-channel carried state,
+ragged `valid_lens` prefixes — and ships a pure-JAX `lax.scan` oracle
+the fused kernel is checked against (the bit-exactness methodology the
+TEDA kernels established):
+
+  * "teda"   — the paper's eccentricity detector (eq (6)); shares the
+               running-sum mean with the other detectors and reuses the
+               TEDA kernel's affine-scan variance recursion verbatim,
+               so its ensemble flags are bit-identical to the "pallas"
+               backend at equal block_t.
+  * "rde"    — recursive density estimation (Angelov's RDE, the close
+               TEDA cousin): biased variance from running sum/sum-of-
+               squares, flag when (x-mean)^2 > m^2 * var_b.
+  * "zscore" — sliding-window z-score over the last `window` samples,
+               carried as a prefix-sum tail (the ring buffer of the
+               oracle, re-expressed so the fused kernel needs no
+               sequential row loop).
+
+Shared-state layout (the `EngineState.aux` rows, `aux_rows(window)` =
+2*window + 1 per channel):
+
+  rows [0, W)    — running-sum prefix tail: row W-1+j-W.. holds
+                   S_{k-(W-1)+j}; row W-1 is the running sum S_k that
+                   the TEDA/RDE mean is derived from.
+  rows [W, 2W)   — the same tail for the running sum of squares.
+  row  2W        — the TEDA variance recursion carry (eq (3)).
+
+All selected-or-not detectors always advance this shared state (it is
+one fabric); per-slot selection weights gate only flags and the vote,
+which is what makes a detector-masked slot bit-identical to a
+single-detector run of the same stream.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.detectors.rde import RdeState, rde_scan
+from repro.detectors.teda import teda_detector_scan
+from repro.detectors.zscore import ZscoreState, zscore_scan
+
+__all__ = ["DETECTORS", "DEFAULT_DETECTORS", "DEFAULT_WINDOW",
+           "aux_rows", "vote_threshold", "RdeState", "ZscoreState",
+           "rde_scan", "zscore_scan", "teda_detector_scan"]
+
+#: canonical detector order — index d is bit d of the fused kernel's
+#: per-sample detector bitmask
+DETECTORS = {"teda": teda_detector_scan, "rde": rde_scan,
+             "zscore": zscore_scan}
+DEFAULT_DETECTORS = ("teda", "rde", "zscore")
+DEFAULT_WINDOW = 8
+VOTE_MODES = ("any", "majority", "all")
+
+
+def aux_rows(window: int = DEFAULT_WINDOW) -> int:
+    """Per-channel shared-state rows: W-deep S tail + W-deep S2 tail +
+    the TEDA variance carry (see module docs)."""
+    if window < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
+    return 2 * int(window) + 1
+
+
+def vote_threshold(vote, weights) -> float:
+    """The weighted-vote decision threshold for one slot.
+
+    `weights` are the slot's per-detector selection weights (0 =
+    detector unselected); the verdict fires when the weight-sum of
+    flagging detectors is >= the returned threshold (and at least one
+    detector is selected).  `vote` is "any" / "majority" / "all", or a
+    float fraction f in (0, 1] meaning f * total selected weight.
+    Ties count: "majority" of 2 unit-weight detectors fires on 1 flag
+    being half the weight — the >= comparison is the documented
+    semantics, chosen so the threshold is exactly representable in
+    float32 for unit weights.
+    """
+    w = np.asarray(weights, np.float32).reshape(-1)
+    w = w[w > 0]
+    tot = float(np.float32(w.sum(dtype=np.float32))) if w.size else 0.0
+    if isinstance(vote, bool) or vote is None:
+        raise ValueError(f"vote must be a mode or fraction, got {vote!r}")
+    if isinstance(vote, (int, float)):
+        if not 0.0 < float(vote) <= 1.0:
+            raise ValueError(
+                f"fractional vote must lie in (0, 1], got {vote}")
+        return float(np.float32(vote)) * tot
+    if vote == "any":
+        return float(w.min()) if w.size else 0.0
+    if vote == "majority":
+        return tot / 2.0
+    if vote == "all":
+        return tot
+    raise ValueError(
+        f"unknown vote mode {vote!r}; expected one of {VOTE_MODES} "
+        "or a fraction in (0, 1]")

@@ -1,0 +1,122 @@
+"""The "ensemble" engine backend: K detectors behind the one-slot
+streaming contract.
+
+Registered in `engine/backends.py` as an *unlisted* backend (it is a
+different detection algorithm, not another TEDA executor, so it must
+not appear in `list_backends()` — the TEDA-semantics conformance
+matrix parametrizes over that list).  Construct it through the normal
+engine options:
+
+    eng = StreamEngine(64, "ensemble", detectors=("teda", "rde"),
+                       vote="majority", window=8)
+    eng.attach([3], detectors=("rde",))   # slot 3 runs RDE alone
+
+The backend's packed state grows the `aux` block (`EngineState.aux`,
+`aux_rows` rows per channel — see `repro.detectors`); the packed
+`mean`/`var` vectors are derived mirrors (running mean, TEDA variance)
+kept for introspection parity with the TEDA backends.  `process`
+returns a 6-tuple `(k', mean', var', aux', det_bits, vote)` — the
+engine routes `det_bits` out on the "ecc" channel (the backend-native
+score stream) and `vote` on "outlier", so the serving stack above the
+engine is structurally unchanged.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.detectors import (DEFAULT_DETECTORS, DEFAULT_WINDOW, aux_rows,
+                             vote_threshold)
+from repro.detectors.ensemble import (EnsembleState, _check_detectors,
+                                      ensemble_scan)
+from repro.engine.backends import Backend
+
+__all__ = ["EnsembleBackend"]
+
+
+class EnsembleBackend(Backend):
+    """Fused multi-detector ensemble executor (float Pallas kernel).
+
+    `detectors` fixes the ensemble's members and their bitmask order
+    (bit d = detectors[d]); per-slot *selection* among them is the
+    runtime `sel` weight matrix the engine threads through
+    `attach(detectors=...)`.  `vote` / `weights` set the default vote
+    mode and per-detector weights (see `detectors.vote_threshold`);
+    `window` sizes the z-score window and the carried aux block.
+    """
+
+    name = "ensemble"
+    state_dtype = jnp.float32
+
+    def __init__(self, m: float = 3.0,
+                 detectors=DEFAULT_DETECTORS,
+                 window: int = DEFAULT_WINDOW, vote="majority",
+                 weights=None, block_t: int = 256,
+                 block_c: Optional[int] = None,
+                 interpret: Optional[bool] = None, lane_pad: int = 128,
+                 **_ignored):
+        self.detectors = _check_detectors(detectors)
+        self.window = int(window)
+        self.aux_rows = aux_rows(self.window)
+        self.vote = vote
+        if weights is None:
+            w = np.ones((len(self.detectors),), np.float32)
+        elif isinstance(weights, dict):
+            unknown = sorted(set(weights) - set(self.detectors))
+            if unknown:
+                raise ValueError(
+                    f"weights for unknown detectors {unknown}; ensemble "
+                    f"members: {list(self.detectors)}")
+            w = np.asarray([weights.get(d, 1.0) for d in self.detectors],
+                           np.float32)
+        else:
+            w = np.asarray(weights, np.float32).reshape(-1)
+            if w.shape != (len(self.detectors),):
+                raise ValueError(
+                    f"weights must have one entry per detector "
+                    f"{list(self.detectors)}, got shape {w.shape}")
+        if (w <= 0).any():
+            raise ValueError(f"detector weights must be positive: {w}")
+        self.weights = w
+        # validates the mode (and the weights) eagerly at construction
+        self.default_threshold = vote_threshold(vote, w)
+        self.m = m
+        self.block_t = block_t
+        self.block_c = block_c
+        self.interpret = interpret
+        self.lane_pad = lane_pad
+
+    def process(self, x, k, mean, var, aux=None, m=None, valid_lens=None,
+                sel=None, thr=None) -> Tuple[jnp.ndarray, ...]:
+        """One fused (T, C) ensemble call.
+
+        `aux` is the packed shared-state block ((aux_rows, C)); `sel`
+        the (K, C) per-slot selection weights and `thr` the (C,) vote
+        thresholds (None: every detector at its default weight, the
+        backend's vote mode).  Returns (k', mean', var', aux',
+        det_bits, vote) — mean'/var' are the derived mirrors of the
+        aux rows (running mean; TEDA variance).
+        """
+        if aux is None:
+            raise ValueError(
+                "the ensemble backend needs the packed aux state "
+                "(engine_init(aux_rows=backend.aux_rows))")
+        c = x.shape[1]
+        if sel is None:
+            sel = jnp.broadcast_to(
+                jnp.asarray(self.weights)[:, None],
+                (len(self.detectors), c))
+        if thr is None:
+            thr = jnp.full((c,), self.default_threshold, jnp.float32)
+        final, out = ensemble_scan(
+            x, self._m(m), EnsembleState(k=k, aux=aux),
+            detectors=self.detectors, window=self.window, sel=sel,
+            thr=thr, valid_lens=valid_lens, block_t=self.block_t,
+            block_c=self.block_c, interpret=self.interpret,
+            lane_pad=self.lane_pad)
+        meanf = final.aux[self.window - 1] / jnp.maximum(final.k, 1.0)
+        varf = final.aux[2 * self.window]
+        return (final.k, meanf, varf, final.aux, out["det_flags"],
+                out["vote"])

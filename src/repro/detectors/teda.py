@@ -1,0 +1,36 @@
+"""TEDA as an ensemble detector: the paper's eq (6) behind the shared
+detector contract.
+
+Thin adapter over the existing associative-scan oracle
+(`core/scan.teda_scan`) so the conformance suite can treat every
+detector uniformly: `(state', {"outlier", "score"})` per (T, C) chunk,
+with `score` the eccentricity stream.  Inside the fused ensemble kernel
+TEDA is not re-implemented — the kernel reuses `teda_scan.py`'s exact
+prefix-sum mean and affine-scan variance arithmetic, which is why its
+ensemble flags are bit-identical to the standalone "pallas" backend at
+equal block_t.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.scan import teda_scan
+from repro.core.teda import TedaState
+
+__all__ = ["teda_detector_scan"]
+
+
+def teda_detector_scan(x: jnp.ndarray, m=3.0,
+                       state: Optional[TedaState] = None, *,
+                       valid_lens=None) -> Tuple[TedaState, dict]:
+    """TEDA oracle over x (T, C) in the detector contract.
+
+    Returns (final TedaState, {"outlier": (T, C) bool, "score": (T, C)
+    eccentricity}).  `m` is a scalar or per-channel (C,) sensitivity;
+    `valid_lens` the per-channel ragged prefix (see `core/scan.py`).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    final, out = teda_scan(x[..., None], m, state, valid_lens=valid_lens)
+    return final, {"outlier": out.outlier, "score": out.ecc}

@@ -20,11 +20,16 @@ the Q path, to float32 rounding on the float paths).
 
 Register out-of-tree executors with `@register_backend("name")`; the
 factory is called with the engine's backend options and must return an
-object with `.state_dtype` and `.process`.
+object with `.state_dtype` and `.process`.  `listed=False` registers a
+backend that `get_backend` resolves but `list_backends()` omits — the
+"ensemble" multi-detector backend (`repro.detectors`) lives there: it
+is a different detection algorithm, not another TEDA executor, so the
+TEDA conformance suites that parametrize over `list_backends()` must
+not pick it up (`list_backends(all=True)` includes it).
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Set, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -39,6 +44,7 @@ from repro.kernels.ops import (teda_q_scan_tpu, teda_q_scan_verdict,
 __all__ = ["Backend", "register_backend", "get_backend", "list_backends"]
 
 _REGISTRY: Dict[str, Callable[..., "Backend"]] = {}
+_LISTED: Set[str] = set()
 
 
 class Backend:
@@ -84,11 +90,19 @@ class Backend:
         return self.m if m is None else m
 
 
-def register_backend(name: str):
-    """Decorator: register a backend factory under `name`."""
+def register_backend(name: str, listed: bool = True):
+    """Decorator: register a backend factory under `name`.
+
+    `listed=False` keeps the backend resolvable by `get_backend` but
+    out of the default `list_backends()` enumeration (see module docs).
+    """
 
     def deco(factory):
         _REGISTRY[name] = factory
+        if listed:
+            _LISTED.add(name)
+        else:
+            _LISTED.discard(name)
         return factory
 
     return deco
@@ -105,8 +119,8 @@ def get_backend(name: str, **opts) -> Backend:
     return factory(**opts)
 
 
-def list_backends():
-    return sorted(_REGISTRY)
+def list_backends(all: bool = False):
+    return sorted(_REGISTRY) if all else sorted(_LISTED)
 
 
 def _as_teda_state(k, mean, var) -> TedaState:
@@ -201,3 +215,12 @@ class PallasQBackend(Backend):
             lane_pad=self.lane_pad)
         return (final.k, final.mean[:, 0], final.var, out["ecc"],
                 out["outlier"])
+
+
+@register_backend("ensemble", listed=False)
+def _ensemble_factory(**opts) -> Backend:
+    """Lazy factory for the fused multi-detector ensemble backend —
+    imported on first use so `repro.engine` does not pull the detector
+    package (and its kernel) in at import time."""
+    from repro.detectors.backend import EnsembleBackend
+    return EnsembleBackend(**opts)

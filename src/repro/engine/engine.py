@@ -90,8 +90,25 @@ class StreamEngine:
         self.backend = get_backend(backend, m=m, fmt=fmt, block_t=block_t,
                                    block_c=block_c, interpret=interpret,
                                    lane_pad=lane_pad, **backend_opts)
+        # aux-carrying backends (the detector ensemble) grow the packed
+        # state by backend.aux_rows rows per slot and take per-slot
+        # detector-selection weights + vote thresholds each call
+        n_aux = int(getattr(self.backend, "aux_rows", 0) or 0)
+        self._ensemble = n_aux > 0
+        if self._ensemble and mesh is not None:
+            raise ValueError(
+                "mesh fan-out is not supported with the ensemble "
+                "backend (the aux state axis is not sharded)")
         self.state = engine_init(self.capacity, self.backend.state_dtype,
-                                 active=auto_attach)
+                                 active=auto_attach, aux_rows=n_aux)
+        if self._ensemble:
+            self._det_names = tuple(self.backend.detectors)
+            self._det_w = np.broadcast_to(
+                np.asarray(self.backend.weights, np.float32)[:, None],
+                (len(self._det_names), self.capacity)).copy()
+            self._det_thr = np.full((self.capacity,),
+                                    self.backend.default_threshold,
+                                    np.float32)
         # per-slot outlier sensitivity, eq (6) m — float even on the Q
         # path (the backend quantizes m^2+1 itself)
         self._m = np.full((self.capacity,), self.default_m, np.float32)
@@ -101,11 +118,22 @@ class StreamEngine:
         # surfaced through SlotPool.stats()["programs"])
         self._t_shapes: set = set()
 
-        def core(x, k, mean, var, vlen, m):
-            st, outs = engine_process(
-                EngineState(k=k, mean=mean, var=var, active=vlen > 0), x,
-                self.backend, m=m, valid_lens=vlen)
-            return (st.k, st.mean, st.var), (outs["ecc"], outs["outlier"])
+        if self._ensemble:
+            def core(x, k, mean, var, aux, vlen, m, sel, thr):
+                st, outs = engine_process(
+                    EngineState(k=k, mean=mean, var=var, active=vlen > 0,
+                                aux=aux),
+                    x, self.backend, m=m, valid_lens=vlen, sel=sel,
+                    thr=thr)
+                return ((st.k, st.mean, st.var, st.aux),
+                        (outs["ecc"], outs["outlier"]))
+        else:
+            def core(x, k, mean, var, vlen, m):
+                st, outs = engine_process(
+                    EngineState(k=k, mean=mean, var=var, active=vlen > 0),
+                    x, self.backend, m=m, valid_lens=vlen)
+                return ((st.k, st.mean, st.var),
+                        (outs["ecc"], outs["outlier"]))
 
         self._mesh = mesh
         if mesh is not None:
@@ -120,7 +148,7 @@ class StreamEngine:
 
     # ------------------------------------------------------ slot admin
     def attach(self, slots=None, n: Optional[int] = None, *,
-               m: Optional[float] = None):
+               m: Optional[float] = None, detectors=None, vote=None):
         """Activate slots for new streams; returns the slot indices.
 
         With `slots=None`, grabs the first `n` free slots (all free
@@ -130,6 +158,12 @@ class StreamEngine:
         without the check a bad attach would look like a success while
         clobbering (or skipping) a live tenant.  `m` sets the new
         tenants' outlier sensitivity (default: the engine's `m`).
+
+        Under the ensemble backend, `detectors` selects the subset of
+        the backend's detectors these tenants run (default: all of
+        them) and `vote` their vote mode / threshold fraction (default:
+        the backend's) — see `set_detectors`.  Both raise on a
+        non-ensemble backend.
         """
         occupied = np.asarray(self.state.active)
         n_act, cap = int(occupied.sum()), self.capacity
@@ -152,13 +186,78 @@ class StreamEngine:
                     f"({n_act}/{cap} active); detach or reset them first")
         self.state = engine_attach(self.state, idx)
         self._m[idx] = self.default_m if m is None else float(m)
+        if detectors is not None or vote is not None:
+            self.set_detectors(idx, detectors=detectors, vote=vote)
+        elif self._ensemble:
+            self._reset_detectors(np.asarray(
+                slot_mask(idx, self.capacity)))
         return idx
 
     def detach(self, slots):
         self.state = engine_detach(self.state, slots)
-        # recycled slots revert to the default sensitivity
-        self._m[np.asarray(slot_mask(slots, self.capacity))] = \
-            self.default_m
+        # recycled slots revert to the default sensitivity/detectors
+        mask = np.asarray(slot_mask(slots, self.capacity))
+        self._m[mask] = self.default_m
+        if self._ensemble:
+            self._reset_detectors(mask)
+
+    def _reset_detectors(self, mask: np.ndarray) -> None:
+        self._det_w[:, mask] = np.asarray(
+            self.backend.weights, np.float32)[:, None]
+        self._det_thr[mask] = self.backend.default_threshold
+
+    def set_detectors(self, slots=None, *, detectors=None,
+                      vote=None) -> None:
+        """Re-select the detector subset / vote mode of live slots.
+
+        `detectors` is a subset of the backend's ensemble members
+        (None keeps all of them); unselected members get weight 0 on
+        those slots — their state still advances (the shared fabric is
+        detector-agnostic) but they contribute neither flags nor vote
+        weight, so a masked slot is exactly a smaller ensemble.  `vote`
+        is a mode name ("any" / "majority" / "all") or a weight
+        fraction in (0, 1]; None keeps the backend's mode, re-evaluated
+        over the *selected* weights.  Only valid under the ensemble
+        backend.
+        """
+        if not self._ensemble:
+            raise ValueError(
+                f"backend {self.backend.name!r} has no detector "
+                "ensemble; per-slot detectors need backend='ensemble'")
+        from repro.detectors import vote_threshold
+        mask = np.asarray(slot_mask(slots, self.capacity))
+        if detectors is None:
+            w = np.asarray(self.backend.weights, np.float32)
+        else:
+            chosen = ((detectors,) if isinstance(detectors, str)
+                      else tuple(detectors))
+            unknown = [d for d in chosen if d not in self._det_names]
+            if unknown or not chosen:
+                raise ValueError(
+                    f"detectors must be a non-empty subset of this "
+                    f"ensemble's members {list(self._det_names)}, got "
+                    f"{detectors!r}")
+            w = np.asarray(
+                [self.backend.weights[d] if name in chosen else 0.0
+                 for d, name in enumerate(self._det_names)], np.float32)
+        thr = vote_threshold(self.backend.vote if vote is None else vote,
+                             w)
+        self._det_w[:, mask] = w[:, None]
+        self._det_thr[mask] = thr
+
+    def detector_config(self, slot: int) -> dict:
+        """The live detector selection of one slot: {"detectors":
+        selected member names, "weights": (K,) per-member weights,
+        "threshold": the vote-weight threshold}."""
+        if not self._ensemble:
+            raise ValueError(
+                f"backend {self.backend.name!r} has no detector "
+                "ensemble")
+        w = self._det_w[:, slot]
+        return {"detectors": tuple(n for d, n in enumerate(self._det_names)
+                                   if w[d] > 0),
+                "weights": w.copy(),
+                "threshold": float(self._det_thr[slot])}
 
     def reset(self, slots=None):
         self.state = engine_reset(self.state, slots)
@@ -278,11 +377,24 @@ class StreamEngine:
         # uniform sensitivity keeps the kernels' scalar fast path (the
         # in-kernel verdict); only a genuinely mixed batch pays the
         # vector-m eq (6) re-evaluation.  The fan-out path shards m as
-        # a (C,) vector, so it always takes the vector form.
+        # a (C,) vector, and the ensemble kernel broadcasts m itself,
+        # so both always take the vector form.
         mv = self._m
-        if self._mesh is None and (mv == mv[0]).all():
+        if self._mesh is None and not self._ensemble \
+                and (mv == mv[0]).all():
             mv = mv[0]
         self._account(t_len, vc, valid_lens is not None, active)
+        if self._ensemble:
+            (k, mean, var, aux), (bits, vote) = self._fn(
+                x, st.k, st.mean, st.var, st.aux, vl,
+                jnp.asarray(self.backend.quantize_m(mv)),
+                jnp.asarray(self._det_w), jnp.asarray(self._det_thr))
+            self.state = EngineState(k=k, mean=mean, var=var,
+                                     active=st.active, aux=aux)
+            # det_flags doubles as the backend-native "ecc" stream so
+            # the serving stack's fetch plumbing stays structurally
+            # unchanged; both keys alias the same array
+            return {"ecc": bits, "outlier": vote, "det_flags": bits}
         (k, mean, var), (ecc, outlier) = self._fn(
             x, st.k, st.mean, st.var, vl,
             jnp.asarray(self.backend.quantize_m(mv)))

@@ -142,17 +142,34 @@ class SlotPool:
             out[:keep] = v
             return jnp.asarray(out)
 
+        def pad2(v):  # (R, C) detector-axis aux: pad the slot axis
+            v = np.asarray(v)[:, :keep]
+            out = np.zeros((v.shape[0], bucket), v.dtype)
+            out[:, :keep] = v
+            return jnp.asarray(out)
+
         dst.state = EngineState(k=pad(st.k, 0), mean=pad(st.mean, 0),
                                 var=pad(st.var, 0),
-                                active=pad(st.active, False))
+                                active=pad(st.active, False),
+                                aux=(None if st.aux is None
+                                     else pad2(st.aux)))
         new_m = np.full((bucket,), self.default_m, np.float32)
         new_m[:keep] = src.slot_m[:keep]
         dst.set_m(None, new_m)
+        if getattr(src, "_ensemble", False):
+            # per-slot detector selection rides along with the state
+            dst._det_w[:, :keep] = src._det_w[:, :keep]
+            dst._det_w[:, keep:] = np.asarray(
+                dst.backend.weights, np.float32)[:, None]
+            dst._det_thr[:keep] = src._det_thr[:keep]
+            dst._det_thr[keep:] = dst.backend.default_threshold
+            src._reset_detectors(np.ones((self._bucket,), bool))
         # the old engine keeps only its compiled programs, not tenants
         src.state = EngineState(
             k=jnp.zeros_like(st.k), mean=jnp.zeros_like(st.mean),
             var=jnp.zeros_like(st.var),
-            active=jnp.zeros_like(st.active))
+            active=jnp.zeros_like(st.active),
+            aux=None if st.aux is None else jnp.zeros_like(st.aux))
         (self._c_grows if bucket > self._bucket
          else self._c_shrinks).inc()
         if self.tracer.enabled:
@@ -170,13 +187,15 @@ class SlotPool:
         return None
 
     # ------------------------------------------------------- tenancy
-    def acquire(self, n: int = 1, *, m: Optional[float] = None
-                ) -> np.ndarray:
+    def acquire(self, n: int = 1, *, m: Optional[float] = None,
+                detectors=None, vote=None) -> np.ndarray:
         """Attach `n` new tenants, growing the bucket if needed.
 
         Returns the acquired slot indices (stable across resizes).
         Raises `PoolFull` when the top bucket cannot hold them — the
-        scheduler's backpressure signal.
+        scheduler's backpressure signal.  `detectors` / `vote` select
+        the new tenants' detector subset and vote mode under the
+        ensemble backend (`StreamEngine.attach`).
         """
         act = np.asarray(self.engine.state.active)
         need = int(act.sum()) + n
@@ -190,7 +209,8 @@ class SlotPool:
                     f"{int(act.sum())}/{self.max_capacity} active at the "
                     f"top bucket", int(act.sum()), self.max_capacity)
             self._resize(target)
-        idx = self.engine.attach(n=n, m=m)
+        idx = self.engine.attach(n=n, m=m, detectors=detectors,
+                                 vote=vote)
         self._g_occupancy.set(need)
         return idx
 

@@ -16,7 +16,7 @@ registry and the stateful `StreamEngine` wrapper live one level up in
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -34,6 +34,12 @@ class EngineState(NamedTuple):
     mean:   (C,) — recursive mean, eq (2).
     var:    (C,) — recursive variance, eq (3).
     active: (C,) bool — slot occupancy; inactive slots never advance.
+    aux:    (R, C) detector-axis carry rows, or None.  The "ensemble"
+            backend packs its K-detector shared fabric here (prefix-sum
+            tails + variance carry, R = backend.aux_rows — see
+            `repro.detectors`); the TEDA backends carry no aux and the
+            field stays None.  `mean`/`var` are derived mirrors of the
+            aux rows under the ensemble backend.
 
     dtype is float32, or int32 Q-values under the "pallas-q" backend.
     """
@@ -42,19 +48,24 @@ class EngineState(NamedTuple):
     mean: jnp.ndarray
     var: jnp.ndarray
     active: jnp.ndarray
+    aux: Optional[jnp.ndarray] = None
 
 
 def engine_init(capacity: int, dtype=jnp.float32,
-                active: bool = True) -> EngineState:
+                active: bool = True, aux_rows: int = 0) -> EngineState:
     """Fresh packed state for `capacity` slots (Algorithm 1 init).
 
     Each field gets its own buffer — aliased zeros would break buffer
     donation when the state is carried through a jitted step.
+    `aux_rows` > 0 allocates the detector-axis carry block (the
+    ensemble backend's `backend.aux_rows`).
     """
     return EngineState(k=jnp.zeros((capacity,), dtype),
                        mean=jnp.zeros((capacity,), dtype),
                        var=jnp.zeros((capacity,), dtype),
-                       active=jnp.full((capacity,), active))
+                       active=jnp.full((capacity,), active),
+                       aux=(jnp.zeros((aux_rows, capacity), dtype)
+                            if aux_rows else None))
 
 
 def slot_mask(slots, capacity: int) -> jnp.ndarray:
@@ -91,7 +102,9 @@ def engine_reset(state: EngineState, slots=None) -> EngineState:
     return EngineState(k=jnp.where(m, zero, state.k),
                        mean=jnp.where(m, zero, state.mean),
                        var=jnp.where(m, zero, state.var),
-                       active=state.active)
+                       active=state.active,
+                       aux=(None if state.aux is None
+                            else jnp.where(m[None, :], zero, state.aux)))
 
 
 def engine_attach(state: EngineState, slots) -> EngineState:
@@ -110,7 +123,8 @@ def engine_detach(state: EngineState, slots) -> EngineState:
 
 
 def engine_process(state: EngineState, x: jnp.ndarray, backend,
-                   m=None, valid_lens=None) -> Tuple[EngineState, dict]:
+                   m=None, valid_lens=None, sel=None,
+                   thr=None) -> Tuple[EngineState, dict]:
     """Advance the packed state through one (T, C) chunk.
 
     `backend` follows the `engine.backends.Backend` contract (duck-typed
@@ -130,7 +144,16 @@ def engine_process(state: EngineState, x: jnp.ndarray, backend,
 
     Returns (state', {"ecc": (T, C), "outlier": (T, C) bool}) — `ecc`
     is in the backend's native domain (Q int32 for "pallas-q").
+
+    Aux-carrying backends (`backend.aux_rows > 0`, i.e. the ensemble)
+    take the extra per-slot `sel` selection weights / `thr` vote
+    thresholds and return a 6-tuple — `ecc` is then the per-detector
+    flag bitmask and `outlier` the fused vote; the aux block freezes
+    with the same masks as k/mean/var.
     """
+    if getattr(backend, "aux_rows", 0):
+        return _engine_process_aux(state, x, backend, m, valid_lens,
+                                   sel, thr)
     if valid_lens is None:
         kf, mf, vf, ecc, outlier = backend.process(x, state.k, state.mean,
                                                    state.var, m=m)
@@ -158,6 +181,47 @@ def engine_process(state: EngineState, x: jnp.ndarray, backend,
     rows = jnp.arange(x.shape[0], dtype=vl.dtype)[:, None]
     outs = {"ecc": ecc,
             "outlier": jnp.logical_and(outlier, rows < vl[None, :])}
+    return new, outs
+
+
+def _engine_process_aux(state: EngineState, x, backend, m, valid_lens,
+                        sel, thr) -> Tuple[EngineState, dict]:
+    """The aux-carrying (ensemble) leg of `engine_process`.
+
+    The backend's kernel already zeroes flags and votes beyond each
+    slot's valid prefix, so the ragged leg passes the verdicts through;
+    the uniform leg gates on `active` exactly like the TEDA leg.
+    """
+    if valid_lens is None:
+        kf, mf, vf, auxf, bits, vote = backend.process(
+            x, state.k, state.mean, state.var, aux=state.aux, m=m,
+            sel=sel, thr=thr)
+        act = state.active
+        new = EngineState(
+            k=jnp.where(act, kf.astype(state.k.dtype), state.k),
+            mean=jnp.where(act, mf, state.mean),
+            var=jnp.where(act, vf, state.var),
+            active=act,
+            aux=jnp.where(act[None, :], auxf, state.aux))
+        outs = {"ecc": jnp.where(act[None, :], bits, 0),
+                "outlier": jnp.logical_and(vote, act[None, :])}
+        return new, outs
+
+    vl = jnp.asarray(valid_lens, jnp.int32)
+    kf, mf, vf, auxf, bits, vote = backend.process(
+        x, state.k, state.mean, state.var, aux=state.aux, m=m,
+        valid_lens=vl, sel=sel, thr=thr)
+    adv = vl > 0
+    new = EngineState(
+        k=jnp.where(adv, kf.astype(state.k.dtype), state.k),
+        mean=jnp.where(adv, mf, state.mean),
+        var=jnp.where(adv, vf, state.var),
+        active=state.active,
+        aux=jnp.where(adv[None, :], auxf, state.aux))
+    rows = jnp.arange(x.shape[0], dtype=vl.dtype)[:, None]
+    live = rows < vl[None, :]
+    outs = {"ecc": jnp.where(live, bits, 0),
+            "outlier": jnp.logical_and(vote, live)}
     return new, outs
 
 

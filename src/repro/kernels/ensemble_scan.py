@@ -1,0 +1,245 @@
+"""Fused multi-detector Pallas kernel: K detectors x C channels per call.
+
+One (chunk_t, C) call on the PR 7 2-D `(channel-block, time-block)`
+grid evaluates every detector of the ensemble (`repro.detectors`) for
+every channel, on ONE shared streaming fabric — the fSEAD structure:
+the detectors share their carried state (running sum, running sum of
+squares, windowed prefix-sum tails, the TEDA variance recursion), so
+adding a detector costs its elementwise score arithmetic, not another
+pass over the stream.
+
+Per (block_t, block_c) tile the kernel computes:
+
+  * the masked prefix sum S (Hillis-Steele doubling — the same
+    `_cumsum_rows` the TEDA kernel uses, so the TEDA lane is
+    bit-identical to `teda_scan.py` at equal block_t),
+  * the sum-of-squares prefix S2 (one more doubling scan; only when
+    RDE or z-score is in the static `detectors` tuple),
+  * the TEDA variance affine scan (only when "teda" is in it),
+  * per-detector flags:  TEDA eq (6); RDE's m-sigma gate on the biased
+    running moments; the windowed z-score via prefix-sum differences
+    S_k - S_{k-W} against the carried W-deep tails,
+  * the (T, C) int32 detector bitmask (bit d = detector d flagged,
+    masked by that channel's selection weight and ragged validity),
+  * the (T, C) weighted-vote verdict: sum_d w_d * flag_d >= thr[c],
+    accumulated in detector order d = 0..K-1 in float32 — the exact
+    order a host recomputation from the emitted bitmask must use.
+
+Carried state is the `EngineState.aux` block (see `repro.detectors`
+module docs for the row layout): W rows of S tail + W rows of S2 tail
++ 1 TEDA variance row, all (1, block_c)-strip scratch inside the
+kernel, re-seeded at each strip's first time block and written back
+once at its last (same carry/donation discipline as `teda_scan.py`:
+`k0` aliases the final-k output, `aux` aliases the final-aux output).
+
+Selection (`sel`, (K, C) weights; 0 = unselected) gates only flags and
+the vote — state always advances for every detector, which is what
+makes a detector-masked slot bit-identical to a single-detector run of
+the same stream.  Ragged `vlen` semantics are the TEDA kernel's:
+validity is a per-channel prefix, invalid rows contribute nothing to
+any carry, no detector flags beyond a channel's vlen.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.teda_scan import (_affine_scan_rows, _cumsum_rows,
+                                     block_spec, tpu_compiler_params)
+
+__all__ = ["ensemble_scan_kernel", "ensemble_pallas_call"]
+
+
+def ensemble_scan_kernel(x_ref, vlen_ref, k0_ref, m_ref, thr_ref, sel_ref,
+                         aux_ref, bits_ref, vote_ref, fk_ref, aux_out_ref,
+                         tail_s, tail_s2, var_c, *, block_t: int,
+                         window: int, detectors: tuple):
+    w = window
+    need_s2 = ("rde" in detectors) or ("zscore" in detectors)
+    i = pl.program_id(1)  # time block (sequential, carry-chained)
+
+    # a new channel strip restarts the time sweep: re-seed its carries
+    # from the aux block (rows [0, W) = S tail, [W, 2W) = S2 tail,
+    # row 2W = TEDA variance)
+    @pl.when(i == 0)
+    def _init():
+        tail_s[...] = aux_ref[0:w, :].astype(jnp.float32)
+        tail_s2[...] = aux_ref[w:2 * w, :].astype(jnp.float32)
+        var_c[...] = aux_ref[2 * w:2 * w + 1, :].astype(jnp.float32)
+
+    x = x_ref[...].astype(jnp.float32)        # (bt, bc)
+    bt, c = x.shape
+    k0 = k0_ref[...].astype(jnp.float32)      # (1, bc)
+    vlen = vlen_ref[...].astype(jnp.float32)  # (1, bc)
+    m = m_ref[...].astype(jnp.float32)        # (1, bc) per-channel m
+    thr = thr_ref[...].astype(jnp.float32)    # (1, bc) vote threshold
+    t = jax.lax.broadcasted_iota(jnp.float32, (bt, 1), 0)
+    g = i * block_t + t                # global row index, (bt, 1)
+    valid = g < vlen                   # ragged-tail mask, (bt, bc)
+    k = k0 + g + 1.0                   # per-channel iteration index
+    m2 = m * m
+
+    # ---- shared MEAN fabric: one prefix sum feeds every detector -------
+    s = _cumsum_rows(jnp.where(valid, x, 0.0)) + tail_s[w - 1:w, :]
+    mean = s / k
+    dr = (x - mean) ** 2               # raw distance to the running mean
+
+    flags = {}
+    if "teda" in detectors:
+        # eq (3) affine scan + eqs (1)/(5)/(6) — the exact arithmetic of
+        # `teda_scan_kernel`, so this lane's flags are bit-identical to
+        # the standalone "pallas" backend at equal block_t
+        first = k <= 1.0
+        d2 = jnp.where(jnp.logical_or(first, ~valid), 0.0, dr)
+        a = jnp.broadcast_to(jnp.where(first, 0.0, (k - 1.0) / k), (bt, c))
+        a = jnp.where(valid, a, 1.0)   # identity map on padded rows
+        av, bv = _affine_scan_rows(a, d2 / k)
+        var = av * var_c[...] + bv
+        safe = var > 0.0
+        ecc = 1.0 / k + jnp.where(safe,
+                                  d2 / (k * jnp.where(safe, var, 1.0)), 0.0)
+        flags["teda"] = jnp.logical_and(ecc * 0.5 > (m2 + 1.0) / (2.0 * k),
+                                        k >= 2.0)
+        var_c[...] = var[block_t - 1:block_t]
+
+    if need_s2:
+        s2 = (_cumsum_rows(jnp.where(valid, x * x, 0.0))
+              + tail_s2[w - 1:w, :])
+
+    if "rde" in detectors:
+        # biased variance from the running moments (Angelov's RDE)
+        meanr = s / k
+        varb = s2 / k - meanr * meanr
+        flags["rde"] = (varb > 0.0) & (k >= 2.0) & (dr > m2 * varb)
+
+    if "zscore" in detectors:
+        # windowed moments as prefix-sum differences against the W-deep
+        # carried tails: s_full[p] = S_{k_blockstart + p - W + 1}, so the
+        # lag row S_{k - W} of in-block row r is s_full[r]
+        s_full = jnp.concatenate([tail_s[...], s], axis=0)    # (W+bt, c)
+        s2_full = jnp.concatenate([tail_s2[...], s2], axis=0)
+        winsum = s - s_full[:bt]
+        winsq = s2 - s2_full[:bt]
+        n = jnp.minimum(k, float(w))
+        muw = winsum / n
+        sigw = winsq / n - muw * muw
+        dz = (x - muw) ** 2
+        flags["zscore"] = (sigw > 0.0) & (k >= 2.0) & (dz > m2 * sigw)
+        # advance the tails to the valid extent of this block: new tail
+        # row j is s_full[n_valid + j] (validity is a prefix, so the
+        # tail stays contiguous for every ragged vlen).  Static-W loop
+        # of 2-D masked reductions — one per tail row — instead of a
+        # 3-D gather (sublane-dynamic indexing is not a Mosaic op).
+        n_valid = jnp.clip(vlen - i * block_t, 0.0, float(bt))  # (1, c)
+        rows = jax.lax.broadcasted_iota(jnp.float32, (bt + w, 1), 0)
+        new_s, new_s2 = [], []
+        for j in range(w):
+            hit = rows == (n_valid + float(j))  # (bt+w, c), exact f32
+            new_s.append(jnp.sum(jnp.where(hit, s_full, 0.0), axis=0,
+                                 keepdims=True))
+            new_s2.append(jnp.sum(jnp.where(hit, s2_full, 0.0), axis=0,
+                                  keepdims=True))
+        tail_s[...] = jnp.concatenate(new_s, axis=0)
+        tail_s2[...] = jnp.concatenate(new_s2, axis=0)
+    else:
+        tail_s[w - 1:w, :] = s[block_t - 1:block_t]
+        if need_s2:
+            tail_s2[w - 1:w, :] = s2[block_t - 1:block_t]
+
+    # ---- selection-masked bitmask + weighted vote ----------------------
+    bits = jnp.zeros((bt, c), jnp.int32)
+    votew = jnp.zeros((bt, c), jnp.float32)
+    totw = jnp.zeros((1, c), jnp.float32)
+    for d, name in enumerate(detectors):
+        wrow = sel_ref[d:d + 1, :].astype(jnp.float32)  # (1, bc)
+        f = flags[name] & (wrow > 0.0) & valid
+        bits = bits + f.astype(jnp.int32) * (1 << d)
+        votew = votew + f.astype(jnp.float32) * wrow
+        totw = totw + wrow
+    vote = (votew >= thr) & (totw > 0.0) & valid
+    bits_ref[...] = bits
+    vote_ref[...] = vote.astype(jnp.int8)
+
+    # final carries once per strip, at its last time block (the aux/k0
+    # donation discipline of `teda_scan.py`)
+    @pl.when(i == pl.num_programs(1) - 1)
+    def _fin():
+        fk_ref[...] = k0 + vlen  # vlen pre-clamped to [0, T] by wrapper
+        aux_out_ref[0:w, :] = tail_s[...]
+        aux_out_ref[w:2 * w, :] = tail_s2[...]
+        aux_out_ref[2 * w:2 * w + 1, :] = var_c[...]
+
+
+def ensemble_pallas_call(x: jnp.ndarray, vlen: jnp.ndarray,
+                         k0: jnp.ndarray, m: jnp.ndarray,
+                         thr: jnp.ndarray, sel: jnp.ndarray,
+                         aux: jnp.ndarray, *, block_t: int,
+                         block_c: int = 0, window: int,
+                         detectors: tuple, interpret: bool,
+                         donate: bool = True):
+    """Raw pallas_call.  x (T, C) pre-padded; vlen / k0 / m / thr are
+    (1, C) per-channel carry rows; sel is the (K, C) selection-weight
+    block; aux the (2*window + 1, C) shared-state block.  `detectors`
+    is the static ensemble tuple — bit d of the emitted mask is
+    detectors[d].  Returns (det_bits, vote, fk, aux_final).  With
+    `donate`, k0 aliases fk and aux aliases aux_final — callers must
+    treat those operands as consumed.
+    """
+    t_len, c = x.shape
+    if not block_c:
+        block_c = c
+    n_aux = 2 * window + 1
+    assert (t_len % block_t == 0 and block_t % 8 == 0
+            and c % block_c == 0 and block_c % 128 == 0), (
+        "wrapper must pad: T % block_t == 0, block_t % 8 == 0, "
+        "C % block_c == 0, block_c % 128 == 0")
+    assert aux.shape == (n_aux, c) and sel.shape == (len(detectors), c)
+    grid = (c // block_c, t_len // block_t)
+
+    row_spec = block_spec((block_t, block_c), lambda j, i: (i, j),
+                          memory_space=pltpu.VMEM)
+    carry_spec = block_spec((1, block_c), lambda j, i: (0, j),
+                            memory_space=pltpu.VMEM)
+    sel_spec = block_spec((len(detectors), block_c), lambda j, i: (0, j),
+                          memory_space=pltpu.VMEM)
+    aux_spec = block_spec((n_aux, block_c), lambda j, i: (0, j),
+                          memory_space=pltpu.VMEM)
+    f32 = jnp.float32
+    out_shape = [
+        jax.ShapeDtypeStruct((t_len, c), jnp.int32),  # detector bitmask
+        jax.ShapeDtypeStruct((t_len, c), jnp.int8),   # fused vote
+        jax.ShapeDtypeStruct((1, c), f32),            # final k
+        jax.ShapeDtypeStruct((n_aux, c), f32),        # final aux block
+    ]
+    out_specs = [row_spec, row_spec, carry_spec, aux_spec]
+    aliases = {}
+    if donate:
+        # k0 -> fk, aux -> final aux (inputs 2 / 6); vlen, m, thr and
+        # sel are read by every grid step — never donated
+        aliases = {2: 2, 6: 3}
+    kernel = functools.partial(ensemble_scan_kernel, block_t=block_t,
+                               window=window, detectors=tuple(detectors))
+    compiler_params = None
+    if not interpret:
+        compiler_params = tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary"))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[row_spec, carry_spec, carry_spec, carry_spec,
+                  carry_spec, sel_spec, aux_spec],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((window, block_c), f32),  # S prefix tail
+            pltpu.VMEM((window, block_c), f32),  # S2 prefix tail
+            pltpu.VMEM((1, block_c), f32),       # TEDA variance carry
+        ],
+        input_output_aliases=aliases,
+        compiler_params=compiler_params,
+        interpret=interpret,
+    )(x, vlen, k0, m, thr, sel, aux)

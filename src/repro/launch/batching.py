@@ -111,6 +111,11 @@ class Request:
     `closed` requests complete once their pending samples drain; open
     requests keep their slot and wait for `feed`.  `priority` names
     the admission class (see `BatchingScheduler(class_weights=)`).
+
+    Under the ensemble backend, `detectors` selects this tenant's
+    detector subset and `vote` its vote mode / threshold fraction
+    (None: the backend's defaults) — threaded to the slot at admission
+    (`SlotPool.acquire` -> `StreamEngine.attach`).
     """
 
     rid: str
@@ -119,6 +124,8 @@ class Request:
     m: Optional[float] = None
     closed: bool = False
     priority: str = "default"
+    detectors: Optional[Tuple[str, ...]] = None
+    vote: Optional[object] = None
 
 
 @dataclass
@@ -143,6 +150,9 @@ class RequestStats:
     prefill_chunks: int = 0
     decode_steps: int = 0
     chunk_latency_s: List[Tuple[float, int]] = field(default_factory=list)
+    # ensemble backend only: per-detector flag counts ({name: count},
+    # selection-masked — an unselected detector never appears)
+    det_flags: Dict[str, int] = field(default_factory=dict)
 
     @property
     def queue_wait_ticks(self) -> Optional[int]:
@@ -278,6 +288,14 @@ class BatchingScheduler:
         self.pool = SlotPool(backend, buckets=buckets, m=m,
                              registry=self.registry, tracer=self.tracer,
                              name=f"{self.name}/pool", **engine_opts)
+        # detector-ensemble serving: when the backend carries a
+        # detector axis, verdict columns come back as per-detector flag
+        # bitmasks ("ecc" stream) and the scheduler accounts flags per
+        # detector at retirement
+        be = self.pool.engine.backend
+        self._ensemble = bool(getattr(be, "aux_rows", 0))
+        self._det_names: Tuple[str, ...] = tuple(
+            getattr(be, "detectors", ()) or ())
         self.chunk_t = int(chunk_t)
         self.decode_t = int(decode_t)
         self.queue_limit = int(queue_limit)
@@ -376,6 +394,21 @@ class BatchingScheduler:
             "sched_request_latency_ticks", "submit-to-done latency",
             ("sched", "class"), buckets=TICK_BUCKETS)
         self._classes: Dict[str, dict] = {}
+        # per-detector flag counts under the ensemble backend; children
+        # created lazily per member detector at first flag
+        self._f_det_flags = reg.counter(
+            "sched_detector_flags_total",
+            "per-detector flags raised (ensemble backend, "
+            "selection-masked)", ("sched", "detector"))
+        self._det_counters: Dict[str, object] = {}
+
+    def _det_counter(self, detector: str):
+        c = self._det_counters.get(detector)
+        if c is None:
+            c = self._f_det_flags.labels(sched=self.name,
+                                         detector=detector)
+            self._det_counters[detector] = c
+        return c
 
     def _cls(self, cls: str) -> dict:
         """The cached per-class instrument children for one priority."""
@@ -509,7 +542,9 @@ class BatchingScheduler:
                 while q and self._deficit[cls] >= 1.0:
                     req = q[0]
                     try:
-                        slot = int(self.pool.acquire(1, m=req.m)[0])
+                        slot = int(self.pool.acquire(
+                            1, m=req.m, detectors=req.detectors,
+                            vote=req.vote)[0])
                     except PoolFull:
                         return  # pool backpressure: wait for a release
                     q.popleft()
@@ -581,16 +616,20 @@ class BatchingScheduler:
         Every member's verdict streams on the event bus here — this is
         the retirement moment, the earliest a verdict exists on host.
         """
+        # the ensemble backend's "ecc" stream is the per-detector flag
+        # bitmask — fetched even with collect=False, it feeds the
+        # per-detector counters below
+        want_ecc = self.collect or self._ensemble
         if self.tracer.enabled:
             with self.tracer.span("retire", tick=self.tick_no,
                                   dispatch_tick=inf.tick, t=inf.t_len,
                                   slots=len(inf.members)):
                 outlier = np.asarray(inf.out["outlier"])
-                ecc = (np.asarray(inf.out["ecc"]) if self.collect
+                ecc = (np.asarray(inf.out["ecc"]) if want_ecc
                        else None)
         else:
             outlier = np.asarray(inf.out["outlier"])
-            ecc = np.asarray(inf.out["ecc"]) if self.collect else None
+            ecc = np.asarray(inf.out["ecc"]) if want_ecc else None
         wall = (inf.sync_wall if inf.sync_wall is not None
                 else time.perf_counter() - inf.t0)
         retired = int(sum(n for _, _, n in inf.members))
@@ -617,6 +656,17 @@ class BatchingScheduler:
             if nf:
                 flagged.append(run.req.rid)
                 self._c_flags.inc(nf)
+            det_counts = None
+            if self._ensemble:
+                # bit d of the "ecc" bitmask column is detectors[d]
+                col_bits = ecc[:n, slot].astype(np.int64)
+                det_counts = {}
+                for d, det in enumerate(self._det_names):
+                    c = int(((col_bits >> d) & 1).sum())
+                    if c:
+                        det_counts[det] = c
+                        self._det_counter(det).inc(c)
+                        st.det_flags[det] = st.det_flags.get(det, 0) + c
             if n > 1:
                 st.prefill_chunks += 1  # a multi-sample (chunked) ride
             else:
@@ -630,6 +680,9 @@ class BatchingScheduler:
                         "outlier": col.copy()}
                 if self.collect:
                     data["ecc"] = ecc[:n, slot].copy()
+                if det_counts is not None:
+                    data["det_flags"] = det_counts
+                    data["detectors"] = self._det_names
                 self.events.publish("chunk_retired", self.tick_no,
                                     run.req.rid, **data)
             run.inflight -= 1
@@ -850,12 +903,16 @@ class BatchingScheduler:
                     c[f"{key}_p50"] = h.quantile(0.5)
                     c[f"{key}_p95"] = h.quantile(0.95)
             classes[cls] = c
-        return {"ticks": self.tick_no, "completed": self.completed,
-                "running": len(self.runs), "queued": self.queued_total,
-                "rejected_submits": self.rejected,
-                "inflight_calls": len(self._inflight),
-                "pipeline_depth": self.pipeline_depth,
-                "short_ticks": self.short_ticks,
-                "chunk_latency": lat, "classes": classes,
-                "programs": self.pool.programs(),
-                "pool": self.pool.stats()}
+        out = {"ticks": self.tick_no, "completed": self.completed,
+               "running": len(self.runs), "queued": self.queued_total,
+               "rejected_submits": self.rejected,
+               "inflight_calls": len(self._inflight),
+               "pipeline_depth": self.pipeline_depth,
+               "short_ticks": self.short_ticks,
+               "chunk_latency": lat, "classes": classes,
+               "programs": self.pool.programs(),
+               "pool": self.pool.stats()}
+        if self._ensemble:
+            out["detector_flags"] = {
+                d: int(c.value) for d, c in self._det_counters.items()}
+        return out

@@ -69,6 +69,9 @@ def serve_streams(streams: Sequence[tuple],
     (None: the gateway default), `priority` its admission class (see
     `BatchingScheduler(class_weights=)`; weights pass through
     `engine_opts`, e.g. `class_weights={"latency": 4, "bulk": 1}`).
+    Under `backend="ensemble"` a tuple may extend to
+    (rid, history, live, m, priority, detectors, vote) — the tenant's
+    detector subset and vote mode, threaded to its slot at admission.
     `arrivals_per_tick` models offered load (None: everything offered
     up front); arrivals the admission queue rejects are re-offered
     next tick, counted in `rejected_submits` — the backpressure
@@ -99,9 +102,12 @@ def serve_streams(streams: Sequence[tuple],
         __slots__ = ("req", "live", "fed", "closed")
 
         def __init__(self, rid, history, live, m_req,
-                     priority="default"):
+                     priority="default", detectors=None, vote=None):
             self.req = Request(rid, np.asarray(history, np.float32),
-                               priority=priority)
+                               priority=priority,
+                               detectors=(None if detectors is None
+                                          else tuple(detectors)),
+                               vote=vote)
             self.req.m = m_req
             self.live = np.asarray(live, np.float32).reshape(-1)
             self.fed = 0
@@ -160,7 +166,8 @@ def serve_streams(streams: Sequence[tuple],
               "queue_wait_ticks": st.queue_wait_ticks,
               "prefill_chunks": st.prefill_chunks,
               "decode_steps": st.decode_steps, "slot": st.slot,
-              "priority": st.priority}
+              "priority": st.priority,
+              "det_flags": dict(st.det_flags)}
         for rid, st in ((rid, sched.telemetry(rid)) for rid in recs)}
     return {
         "backend": backend, "chunk_t": chunk_t,
