@@ -1,0 +1,166 @@
+"""Sharded-pool scaling bench: samples/s at shards ∈ {1, 2, 4}.
+
+Measures what `engine/sharded.py` buys and what it costs: a fixed
+stream population is served through a `ShardedPool` at increasing
+shard counts (shape "uniform" — the scaling-efficiency rows: perfect
+sharding holds samples/s flat as K grows on one host, and splits the
+work K ways on K real devices), plus a "storm" shape that migrates a
+stream between shards every chunk mid-run — the worst-case rebalancer
+cadence — so the migration path's host-sync cost is a measured number
+next to the steady-state rows.
+
+Rows carry `shards` (a `check_regression.py` identity key) and
+`samples_per_s` (the gated metric); uniform rows also carry
+`scaling_efficiency` — their throughput relative to the same
+backend's shards=1 row.  Runs on whatever devices jax sees: CI gates
+on the single-device CPU numbers; `REPRO_VIRTUAL_DEVICES=8` exercises
+the same code over a split host.
+
+    PYTHONPATH=src python benchmarks/bench_sharded.py
+    PYTHONPATH=src python benchmarks/bench_sharded.py --smoke   # CI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.engine import ShardedPool, list_backends
+from repro.fixedpoint import QFormat
+
+SHARD_COUNTS = (1, 2, 4)
+
+
+def _serve_chunks(pool, rids, data, t, storm: bool) -> int:
+    """Feed every chunk through the pool's shards; returns migrations
+    executed.  Each chunk's outlier plane is fetched to host — the
+    same consume cadence the scheduler has — so reps are comparable
+    across shard counts."""
+    chunks = data.shape[0] // t
+    moved = 0
+    for c in range(chunks):
+        if storm and c and pool.n_shards > 1:
+            rid = rids[c % len(rids)]
+            src = pool.lookup(rid)[0]
+            pool.migrate(rid, (src + 1) % pool.n_shards)
+            moved += 1
+        by_shard = {}
+        for j, rid in enumerate(rids):
+            s, slot = pool.lookup(rid)
+            by_shard.setdefault(s, []).append((slot, j))
+        for s, members in sorted(by_shard.items()):
+            cap = pool.shard_capacity(s)
+            x = np.zeros((t, cap), np.float32)
+            vl = np.zeros((cap,), np.int32)
+            for slot, j in members:
+                x[:, slot] = data[c * t:(c + 1) * t, j]
+                vl[slot] = t
+            out = pool.process_shard(s, x, valid_lens=vl)
+            np.asarray(out["outlier"])  # host fetch = consume point
+    return moved
+
+
+def bench_one(backend: str, shards: int, *, n_streams: int,
+              chunks: int, t: int, buckets, fmt, interpret,
+              shape: str = "uniform", reps: int = 2) -> dict:
+    rng = np.random.default_rng(0)
+    data = rng.normal(size=(chunks * t, n_streams)).astype(np.float32)
+    best = None
+    moved = 0
+    for _ in range(reps):
+        # shards=1 is the reference row and still a ShardedPool: the
+        # scaling ratios isolate the fan-out, not the wrapper overhead
+        pool = ShardedPool(backend, shards=shards, buckets=buckets,
+                           fmt=fmt, interpret=interpret)
+        rids = [f"s{i}" for i in range(n_streams)]
+        for rid in rids:
+            pool.acquire(rid)
+        # untimed warmup chunk per shard: compiles out of the timing
+        _serve_chunks(pool, rids, data[:t], t, storm=False)
+        t0 = time.perf_counter()
+        moved = _serve_chunks(pool, rids, data, t,
+                              storm=(shape == "storm"))
+        wall = time.perf_counter() - t0
+        samples = chunks * t * n_streams
+        row = {"backend": backend, "shards": shards, "shape": shape,
+               "streams": n_streams, "samples": samples,
+               "wall_s": wall, "samples_per_s": samples / wall,
+               "migrations": moved}
+        if best is None or row["samples_per_s"] > best["samples_per_s"]:
+            best = row
+    return best
+
+
+def run(backends, shard_counts, *, n_streams, chunks, t, buckets,
+        wl=32, fl=20, interpret=None, reps=2):
+    fmt = QFormat(wl, fl)
+    rows = []
+    for backend in backends:
+        base = None
+        for shards in shard_counts:
+            row = bench_one(backend, shards, n_streams=n_streams,
+                            chunks=chunks, t=t, buckets=buckets,
+                            fmt=fmt, interpret=interpret, reps=reps)
+            if shards == 1:
+                base = row["samples_per_s"]
+            if base:
+                row["scaling_efficiency"] = row["samples_per_s"] / base
+            rows.append(row)
+        # migration storm at the widest shard count: every chunk moves
+        # one stream — the worst rebalancer cadence
+        rows.append(bench_one(
+            backend, max(shard_counts), n_streams=n_streams,
+            chunks=chunks, t=t, buckets=buckets, fmt=fmt,
+            interpret=interpret, shape="storm", reps=reps))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--streams", type=int, default=32)
+    ap.add_argument("--chunks", type=int, default=16)
+    ap.add_argument("--chunk-t", type=int, default=64)
+    ap.add_argument("--shards", default="1,2,4",
+                    help="comma-separated shard counts")
+    ap.add_argument("--backends", default=",".join(list_backends()))
+    ap.add_argument("--buckets", default="8,16,32,64")
+    ap.add_argument("--wl", type=int, default=32)
+    ap.add_argument("--fl", type=int, default=20)
+    ap.add_argument("--out", default=None, help="write JSON here")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes + interpret mode (CI perf gate)")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        backends = ["scan"]
+        shard_counts = (1, 2, 4)
+        # single-bucket-reachable sizing: storm migrations stay inside
+        # the 4-slot bucket, so the gated row measures migration's
+        # host-sync cost, not bucket-resize recompiles (too noisy for
+        # the 25% gate)
+        n_streams, chunks, t, buckets = 8, 64, 32, (4, 8)
+        interpret, reps = True, 3
+    else:
+        backends = [b for b in args.backends.split(",") if b]
+        shard_counts = tuple(int(s) for s in args.shards.split(","))
+        n_streams, chunks, t = args.streams, args.chunks, args.chunk_t
+        buckets = tuple(int(s) for s in args.buckets.split(","))
+        interpret, reps = None, 2
+
+    rows = run(backends, shard_counts, n_streams=n_streams,
+               chunks=chunks, t=t, buckets=buckets, wl=args.wl,
+               fl=args.fl, interpret=interpret, reps=reps)
+    doc = {"bench": "sharded_scaling", "smoke": bool(args.smoke),
+           "rows": rows}
+    text = json.dumps(doc, indent=2)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    return doc
+
+
+if __name__ == "__main__":
+    main()

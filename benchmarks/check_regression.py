@@ -36,7 +36,8 @@ import sys
 # row fields that identify a configuration (everything else is measured)
 ID_KEYS = ("bench", "backend", "chunk_t", "decode_t", "offered_load",
            "shape", "channels", "block_t", "block_c", "outputs",
-           "pipeline_depth", "detector", "ensemble_k", "vote")
+           "pipeline_depth", "detector", "ensemble_k", "vote",
+           "shards")
 METRIC = "samples_per_s"
 
 

@@ -43,7 +43,8 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
 
 CSV_BENCHES = ("detection", "occupation", "throughput", "platforms",
                "bitaccurate")
-JSON_BENCHES = ("engine", "serving", "kernel_grid", "ensemble")
+JSON_BENCHES = ("engine", "serving", "kernel_grid", "ensemble",
+                "sharded")
 ANALYTIC_BENCHES = ("roofline",)
 
 

@@ -16,10 +16,12 @@ from repro.engine.backends import (Backend, get_backend, list_backends,
                                    register_backend)
 from repro.engine.engine import StreamEngine
 from repro.engine.pool import PoolFull, SlotPool
+from repro.engine.sharded import HashRing, ShardedPool, stable_hash
 
 __all__ = [
     "Backend", "get_backend", "list_backends", "register_backend",
     "EngineState", "StreamEngine", "SlotPool", "PoolFull",
+    "HashRing", "ShardedPool", "stable_hash",
     "engine_init", "engine_process", "engine_step", "engine_reset",
     "engine_attach", "engine_detach", "slot_mask",
 ]

@@ -87,7 +87,7 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
-from repro.engine import PoolFull, SlotPool
+from repro.engine import PoolFull, ShardedPool, SlotPool
 from repro.obs import (EventBus, LATENCY_MS_BUCKETS, MetricsRegistry,
                        NULL_TRACER, TICK_BUCKETS, auto_name)
 
@@ -145,6 +145,10 @@ class RequestStats:
     admitted_tick: Optional[int] = None
     done_tick: Optional[int] = None
     slot: Optional[int] = None
+    # sharded scheduling only: the current shard (None on a single
+    # pool) and how many times the rebalancer moved this stream
+    shard: Optional[int] = None
+    migrations: int = 0
     samples: int = 0
     flags: int = 0
     prefill_chunks: int = 0
@@ -164,13 +168,15 @@ class RequestStats:
 class _Run:
     """Internal per-request runtime record (admitted requests only)."""
 
-    __slots__ = ("req", "slot", "pending", "cursor", "phase", "stats",
-                 "ecc_parts", "outlier_parts", "hist_len", "consumed",
-                 "inflight")
+    __slots__ = ("req", "slot", "shard", "pending", "cursor", "phase",
+                 "stats", "ecc_parts", "outlier_parts", "hist_len",
+                 "consumed", "inflight")
 
-    def __init__(self, req: Request, slot: int, stats: RequestStats):
+    def __init__(self, req: Request, slot: int, stats: RequestStats,
+                 shard: int = 0):
         self.req = req
         self.slot = slot
+        self.shard = shard
         self.pending = np.asarray(req.history, np.float32).reshape(-1)
         self.cursor = 0
         # the replayed prefix: everything backlogged at admission is
@@ -186,6 +192,12 @@ class _Run:
     @property
     def avail(self) -> int:
         return self.pending.shape[0] - self.cursor
+
+    @property
+    def place(self) -> Tuple[int, int]:
+        """(shard, local slot) — the fencing key: local slot indices
+        collide across shards, the pair never does."""
+        return (self.shard, self.slot)
 
     def push(self, samples: np.ndarray) -> None:
         samples = np.asarray(samples, np.float32).reshape(-1)
@@ -208,15 +220,18 @@ class _InFlight:
     """One dispatched-but-unfetched fused call (device arrays are JAX
     async futures; fetching them is the sync point)."""
 
-    __slots__ = ("out", "members", "t_len", "tick", "t0", "sync_wall")
+    __slots__ = ("out", "members", "t_len", "tick", "t0", "sync_wall",
+                 "shard")
 
-    def __init__(self, out, members, t_len, tick, t0, sync_wall):
+    def __init__(self, out, members, t_len, tick, t0, sync_wall,
+                 shard=None):
         self.out = out              # {"ecc", "outlier"} device arrays
-        self.members = members      # [(run, slot, n)] at dispatch time
+        self.members = members      # [(run, col, n)] at dispatch time
         self.t_len = t_len
         self.tick = tick
         self.t0 = t0
         self.sync_wall = sync_wall  # honest wall when measured sync
+        self.shard = shard          # which shard's engine ran the call
 
 
 def _host_ready(out) -> bool:
@@ -262,6 +277,10 @@ class BatchingScheduler:
                  call_log_len: int = 4096,
                  latency_log_len: int = 4096,
                  class_weights: Optional[Dict[str, float]] = None,
+                 shards: int = 1, shard_devices=None,
+                 ring_vnodes: int = 128,
+                 rebalance_every: int = 0,
+                 rebalance_threshold: int = 2,
                  registry=None, tracer=None,
                  name: Optional[str] = None,
                  **engine_opts):
@@ -285,9 +304,31 @@ class BatchingScheduler:
         # program: a small block keeps the padded time extent (and
         # interpret-mode cost) proportionate
         engine_opts.setdefault("block_t", 8)
-        self.pool = SlotPool(backend, buckets=buckets, m=m,
-                             registry=self.registry, tracer=self.tracer,
-                             name=f"{self.name}/pool", **engine_opts)
+        # shards > 1 swaps the single SlotPool for a ShardedPool: one
+        # logical pool over N shards with consistent-hash routing and
+        # live migration; each tick dispatches one fused call per shard
+        # with work, async and fenced exactly like the single pool
+        self.n_shards = int(shards)
+        if self.n_shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        self._sharded = self.n_shards > 1
+        self.rebalance_every = int(rebalance_every)
+        if self.rebalance_every < 0:
+            raise ValueError(
+                f"rebalance_every must be >= 0, got {rebalance_every}")
+        if self._sharded:
+            self.pool = ShardedPool(
+                backend, shards=self.n_shards, buckets=buckets, m=m,
+                vnodes=ring_vnodes, devices=shard_devices,
+                rebalance_threshold=rebalance_threshold,
+                registry=self.registry, tracer=self.tracer,
+                events=self.events, name=f"{self.name}/pool",
+                **engine_opts)
+        else:
+            self.pool = SlotPool(backend, buckets=buckets, m=m,
+                                 registry=self.registry,
+                                 tracer=self.tracer,
+                                 name=f"{self.name}/pool", **engine_opts)
         # detector-ensemble serving: when the backend carries a
         # detector axis, verdict columns come back as per-detector flag
         # bitmasks ("ecc" stream) and the scheduler accounts flags per
@@ -522,14 +563,22 @@ class BatchingScheduler:
         weights are the one retained configuration), `PoolFull` ends
         the round — leftover deficits carry to the next tick, so a
         class starved by backpressure catches up first.
+
+        Sharded pools narrow the backpressure: `PoolFull` from one
+        shard's ladder blocks only the class whose head is routed
+        there (FIFO within the class holds); other classes keep
+        admitting — their streams may route to shards with room.  On a
+        single pool a full ladder still ends the whole round, exactly
+        as before.
         """
+        blocked: set = set()
         while True:
             for c in [c for c, q in self._queues.items() if not q]:
                 del self._queues[c]
                 self._deficit.pop(c, None)
                 if c not in self._ctor_classes:
                     self._weights.pop(c, None)
-            backlogged = list(self._queues)
+            backlogged = [c for c in self._queues if c not in blocked]
             if not backlogged:
                 return
             # top every backlogged class up *before* admitting, so a
@@ -542,17 +591,28 @@ class BatchingScheduler:
                 while q and self._deficit[cls] >= 1.0:
                     req = q[0]
                     try:
-                        slot = int(self.pool.acquire(
-                            1, m=req.m, detectors=req.detectors,
-                            vote=req.vote)[0])
+                        if self._sharded:
+                            shard, slot = self.pool.acquire(
+                                req.rid, m=req.m,
+                                detectors=req.detectors, vote=req.vote)
+                        else:
+                            shard, slot = 0, int(self.pool.acquire(
+                                1, m=req.m, detectors=req.detectors,
+                                vote=req.vote)[0])
                     except PoolFull:
-                        return  # pool backpressure: wait for a release
+                        if not self._sharded:
+                            return  # whole pool full: round over
+                        blocked.add(cls)  # this head's shard is full
+                        break
                     q.popleft()
                     self._deficit[cls] -= 1.0
                     st = self.stats_by_rid[req.rid]
                     st.admitted_tick = self.tick_no
                     st.slot = slot
-                    self.runs[req.rid] = _Run(req, slot, st)
+                    if self._sharded:
+                        st.shard = shard
+                    self.runs[req.rid] = _Run(req, slot, st,
+                                              shard=shard)
                     events["admitted"].append(req.rid)
                     ch = self._cls(req.priority)
                     ch["queued"].dec()
@@ -567,12 +627,30 @@ class BatchingScheduler:
                         priority=req.priority)
 
     def _dispatch(self, members: List[_Run]) -> None:
-        """One fused ragged (t, C) engine call: slot c retires
-        min(pending_c, t) samples via the per-slot valid-length
-        vector; everyone else is suspended at vlen=0.  Decode-only
-        ticks (every member's pending <= decode_t) ride the short
-        cached (decode_t, C) program instead of the full chunk."""
-        cap = self.pool.capacity
+        """Dispatch one fused ragged call per shard holding ready
+        members (a single call on an unsharded pool).  The per-shard
+        split cannot change any slot's retirement: each slot still
+        takes n = min(pending, t_len), and the short-tick choice only
+        drops t_len when every member of that call fits under it."""
+        if not self._sharded:
+            self._dispatch_group(members, 0)
+            return
+        by_shard: Dict[int, List[_Run]] = {}
+        for run in members:
+            by_shard.setdefault(run.shard, []).append(run)
+        for shard in sorted(by_shard):
+            self._dispatch_group(by_shard[shard], shard)
+
+    def _dispatch_group(self, members: List[_Run],
+                        shard: int) -> None:
+        """One fused ragged (t, C) engine call on one shard: slot c
+        retires min(pending_c, t) samples via the per-slot
+        valid-length vector; everyone else is suspended at vlen=0.
+        Decode-only ticks (every member's pending <= decode_t) ride
+        the short cached (decode_t, C) program instead of the full
+        chunk."""
+        cap = (self.pool.shard_capacity(shard) if self._sharded
+               else self.pool.capacity)
         t_len = self.chunk_t
         if all(r.avail <= self.decode_t for r in members):
             t_len = self.decode_t
@@ -589,13 +667,16 @@ class BatchingScheduler:
         self._c_calls.inc()
         span = (self.tracer.span(
                     "dispatch", device=True, tick=self.tick_no,
-                    t=t_len, slots=len(mem),
+                    t=t_len, slots=len(mem), shard=shard,
                     samples=int(sum(n for _, _, n in mem)))
                 if self.tracer.enabled else None)
         if span is not None:
             span.__enter__()
         t0 = time.perf_counter()
-        out = self.pool.process(x, valid_lens=vlens)
+        if self._sharded:
+            out = self.pool.process_shard(shard, x, valid_lens=vlens)
+        else:
+            out = self.pool.process(x, valid_lens=vlens)
         sync_wall = None
         if self.measure_latency:
             jax.block_until_ready(out["ecc"])
@@ -603,7 +684,8 @@ class BatchingScheduler:
         if span is not None:
             span.__exit__(None, None, None)
         self._inflight.append(_InFlight(
-            out, mem, t_len, self.tick_no, t0, sync_wall))
+            out, mem, t_len, self.tick_no, t0, sync_wall,
+            shard=shard if self._sharded else None))
         self._g_inflight.set(len(self._inflight))
 
     def _retire(self, inf: _InFlight, events: Optional[dict]) -> None:
@@ -678,6 +760,8 @@ class BatchingScheduler:
                 data = {"slot": slot, "n": n, "flags": nf,
                         "dispatch_tick": inf.tick,
                         "outlier": col.copy()}
+                if inf.shard is not None:
+                    data["shard"] = inf.shard
                 if self.collect:
                     data["ecc"] = ecc[:n, slot].copy()
                 if det_counts is not None:
@@ -714,6 +798,10 @@ class BatchingScheduler:
             self._deferred_flagged.clear()
         # host bookkeeping first: admission + take + vlens assembly all
         # overlap with the previous tick's in-flight device compute
+        if (self._sharded and self.rebalance_every
+                and self.tick_no > 0
+                and self.tick_no % self.rebalance_every == 0):
+            self._rebalance()
         self._admit(events)
         ready = [r for r in self.runs.values() if r.avail > 0]
         deep = self.pipeline_depth > 1 and not self.measure_latency
@@ -722,10 +810,12 @@ class BatchingScheduler:
             # one (its chunks must be fetched in dispatch order).  When
             # every ready slot is fenced, force-retire oldest calls
             # until one frees up — a tick with work always dispatches.
+            # The fence key is (shard, slot): local slot indices
+            # collide across shards, the pair never does.
             def _free():
-                fenced = {s for i in self._inflight
-                          for _, s, _ in i.members}
-                return [r for r in ready if r.slot not in fenced]
+                fenced = {r.place for i in self._inflight
+                          for r, _, _ in i.members}
+                return [r for r in ready if r.place not in fenced]
             free = _free()
             while not free and self._inflight:
                 self._retire(self._inflight.popleft(), events)
@@ -739,11 +829,14 @@ class BatchingScheduler:
             # landed on host retire now, whatever their dispatch order
             # (fencing makes per-slot order immune to it); then the
             # oldest calls retire until the pipeline fits its depth
+            # (each shard dispatches its own call, so a K-shard pool
+            # keeps depth*K calls in flight)
             for inf in [i for i in self._inflight
                         if _host_ready(i.out)]:
                 self._inflight.remove(inf)
                 self._retire(inf, events)
-            while len(self._inflight) > self.pipeline_depth:
+            depth_cap = self.pipeline_depth * self.n_shards
+            while len(self._inflight) > depth_cap:
                 self._retire(self._inflight.popleft(), events)
         else:
             # retire everything dispatched *before* this tick; this
@@ -765,7 +858,10 @@ class BatchingScheduler:
             run.phase = DONE
             st = run.stats
             st.done_tick = self.tick_no
-            self.pool.release([run.slot])
+            if self._sharded:
+                self.pool.release(rid)
+            else:
+                self.pool.release([run.slot])
             self._c_completed.inc()
             ch = self._cls(st.priority)
             ch["running"].dec()
@@ -783,6 +879,23 @@ class BatchingScheduler:
                 self._note_evicted(old)
                 self.events.publish("evicted", self.tick_no, old)
         return events
+
+    def _rebalance(self) -> None:
+        """Run the pool's occupancy rebalancer and mirror the moves
+        into scheduler bookkeeping.  Streams with in-flight calls are
+        pinned in place: migration's state fetch must not race a
+        dispatched chunk, and the fence key (shard, slot) must stay
+        stable while a call referencing it is outstanding."""
+        avoid = {rid for rid, r in self.runs.items() if r.inflight}
+        moves = self.pool.rebalance(avoid=avoid, tick=self.tick_no)
+        for rid, _src, dst, new_slot in moves:
+            run = self.runs[rid]
+            run.shard = dst
+            run.slot = new_slot
+            st = run.stats
+            st.shard = dst
+            st.slot = new_slot
+            st.migrations += 1
 
     def _note_evicted(self, rid: str) -> None:
         if len(self._evicted) == self._evicted.maxlen:
@@ -803,8 +916,16 @@ class BatchingScheduler:
         waiting for `feed`, and only `close()` lets them finish."""
         start = self.tick_no
         while self.queued_total or self.runs:
-            can_admit = bool(self.queued_total) and (
-                self.pool.occupancy < self.pool.max_capacity)
+            if self._sharded:
+                # pool-wide headroom is not enough here: each class's
+                # FIFO head is pinned to its ring shard, so progress
+                # needs *that* shard (not just any shard) to have room
+                can_admit = any(
+                    self.pool.shard_free(self.pool.route(q[0].rid)) > 0
+                    for q in self._queues.values() if q)
+            else:
+                can_admit = bool(self.queued_total) and (
+                    self.pool.occupancy < self.pool.max_capacity)
             has_work = (self._inflight
                         or any(r.avail > 0 for r in self.runs.values()))
             completing = any(r.req.closed and r.avail == 0
@@ -912,6 +1033,10 @@ class BatchingScheduler:
                "chunk_latency": lat, "classes": classes,
                "programs": self.pool.programs(),
                "pool": self.pool.stats()}
+        if self._sharded:
+            out["shards"] = self.n_shards
+            out["migrations"] = self.pool.migrations
+            out["imbalance"] = self.pool.imbalance
         if self._ensemble:
             out["detector_flags"] = {
                 d: int(c.value) for d, c in self._det_counters.items()}

@@ -87,6 +87,11 @@ def serve_streams(streams: Sequence[tuple],
     so depth and honest per-call latencies are mutually exclusive
     knobs.  `block_c` (also via `engine_opts`) tiles the kernel grid's
     channel axis for multi-core TPU scaling at wide capacities.
+    `shards=K` (with optional `rebalance_every`) swaps the single pool
+    for a `ShardedPool`: consistent-hash routing over K device shards,
+    one fused call per shard per tick, live migration under the
+    occupancy rebalancer — gateway verdicts stay bit-exact with the
+    single pool (see README §sharding).
 
     Observability (`repro.obs`): `registry`/`tracer` pass through to
     the scheduler (and down to pool + engines); `on_event` is a
@@ -166,6 +171,7 @@ def serve_streams(streams: Sequence[tuple],
               "queue_wait_ticks": st.queue_wait_ticks,
               "prefill_chunks": st.prefill_chunks,
               "decode_steps": st.decode_steps, "slot": st.slot,
+              "shard": st.shard, "migrations": st.migrations,
               "priority": st.priority,
               "det_flags": dict(st.det_flags)}
         for rid, st in ((rid, sched.telemetry(rid)) for rid in recs)}
@@ -185,6 +191,9 @@ def serve_streams(streams: Sequence[tuple],
         "flagged": sorted(rid for rid in recs
                           if sched.telemetry(rid).flags),
         "pool": agg["pool"],
+        # sharded gateway only (shards > 1 via engine_opts)
+        **{k: agg[k] for k in ("shards", "migrations", "imbalance")
+           if k in agg},
         "per_request": per_request,
         "metrics": sched.registry.snapshot(),
         "_scheduler": sched,  # for tests; stripped by the benchmark
@@ -346,6 +355,12 @@ def main(argv=None):
     ap.add_argument("--block-c", type=int, default=None,
                     help="channel-block width of the kernel grid "
                          "(multiple of 128; default: one strip)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="shard the pool over this many devices "
+                         "(consistent-hash routing + live migration)")
+    ap.add_argument("--rebalance-every", type=int, default=0,
+                    help="run the occupancy rebalancer every N ticks "
+                         "(0: never; sharded gateway only)")
     args = ap.parse_args(argv)
 
     fmt = None
@@ -360,6 +375,8 @@ def main(argv=None):
             decode_t=args.decode_t,
             pipeline_depth=args.pipeline_depth,
             block_c=args.block_c,
+            shards=args.shards,
+            rebalance_every=args.rebalance_every,
             # depth > 1 only pipelines in the async loop
             measure_latency=args.pipeline_depth <= 1,
             class_weights={"latency": 4.0, "bulk": 1.0},
@@ -378,6 +395,10 @@ def main(argv=None):
             print(f"[serve]   class {cls}: {c['completed']} done, "
                   f"queue wait p95 "
                   f"{c.get('queue_wait_ticks_p95', 0):.0f} ticks")
+        if args.shards > 1:
+            print(f"[serve] {res['shards']} shards, "
+                  f"{res['migrations']} migrations, "
+                  f"final imbalance {res['imbalance']}")
         print(f"[serve] flagged tenants: {res['flagged']}")
         return
 

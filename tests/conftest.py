@@ -1,5 +1,40 @@
 """Shared test helpers."""
+import os
+import sys
+
 import pytest
+
+# Virtual-device harness for the sharding suite: when the run opts in
+# via REPRO_VIRTUAL_DEVICES=N, split the host CPU into N XLA devices
+# *before* jax initializes its backend (the flag is inert afterwards —
+# hence env-guarded module-level setup, not a fixture).  Regular runs
+# see the usual single device and every tier-1 result is untouched.
+_N_VIRTUAL = int(os.environ.get("REPRO_VIRTUAL_DEVICES", "0") or 0)
+if _N_VIRTUAL > 1 and "jax" not in sys.modules \
+        and "xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_N_VIRTUAL}"
+    ).strip()
+
+
+def virtual_devices(n):
+    """The first `n` jax devices, or skip the test cleanly.
+
+    Sharding tests call this to run on a real multi-device topology in
+    CPU-only CI (`REPRO_VIRTUAL_DEVICES=8` splits the host before jax
+    boots).  Without the opt-in — or when the flag could not apply, e.g.
+    jax was already initialized — the suite still collects and the
+    multi-device cases skip with the recipe in the reason.
+    """
+    import jax
+    devs = jax.devices()
+    if len(devs) < n:
+        pytest.skip(
+            f"needs {n} devices, have {len(devs)} — run with "
+            f"REPRO_VIRTUAL_DEVICES={max(n, 8)} to split the host CPU")
+    return devs[:n]
 
 
 def given_or_cases(argnames, cases, strategies, max_examples=100):
