@@ -4,12 +4,19 @@ The fSEAD line of work composes several streaming detectors behind one
 serving interface; the cost question is what the fused K-detector
 kernel pays over a single-detector engine.  This benchmark measures
 `StreamEngine(backend="ensemble")` samples/s for each ensemble member
-alone (K=1) and for the full fused ensemble (K=3, majority vote) on
+alone (K=1) and for the fused moment ensemble (K=3, majority vote) on
 the same stream, and reports the K=3 overhead factor — single-detector
 samples/s over fused samples/s (1.0 = free composability; the CI gate
 asserts it stays under `MAX_K3_OVERHEAD`, since the fused kernel
 shares the prefix-sum fabric across members and should never cost
-anywhere near K times a single detector).
+anywhere near K times a single detector).  The non-moment members
+("hst", the Q-format "teda-q" lane) and the full K=5 ensemble get
+informational rows — their opaque-region lanes run sequential row
+loops, so they price differently and sit outside the K=3 gate.
+
+Every row carries the `window` and `state_rows` (the ensemble
+`StateSpec`'s per-channel aux rows) ID columns, so baselines keyed on
+an old state layout never silently compare against a new one.
 
 Emits a JSON table (one row per detector selection x chunk size):
 
@@ -25,8 +32,16 @@ import time
 import jax
 import numpy as np
 
-from repro.detectors import DEFAULT_DETECTORS
+from repro.detectors import DEFAULT_DETECTORS, DEFAULT_WINDOW, ensemble_spec
 from repro.engine import StreamEngine
+from repro.fixedpoint import QFormat
+
+#: detector selections beyond the gated K=3 moment ensemble: the
+#: non-moment members alone, then every member fused (informational)
+EXTRA_SELECTIONS = (("hst",), ("teda-q",),
+                    DEFAULT_DETECTORS + ("hst", "teda-q"))
+#: the Q-format of the "teda-q" member's datapath in these rows
+BENCH_FMT = QFormat(32, 20)
 
 # acceptance ceiling for the fused-vs-single overhead factor: the K=3
 # ensemble must stay cheaper than 2.5x a single detector per sample
@@ -39,8 +54,10 @@ def bench_one(detectors, channels: int, chunk_t: int, total_t: int, *,
     rng = np.random.default_rng(0)
     x = rng.normal(size=(total_t, channels)).astype(np.float32)
     chunks = [x[i:i + chunk_t] for i in range(0, total_t, chunk_t)]
+    detectors = tuple(detectors)
+    fmt = BENCH_FMT if "teda-q" in detectors else None
     eng = StreamEngine(channels, "ensemble", m=3.0,
-                       detectors=tuple(detectors), vote=vote,
+                       detectors=detectors, vote=vote, fmt=fmt,
                        block_t=block_t, interpret=interpret)
 
     def run():
@@ -69,6 +86,8 @@ def bench_one(detectors, channels: int, chunk_t: int, total_t: int, *,
         "detector": "+".join(detectors),
         "ensemble_k": len(detectors),
         "vote": vote,
+        "window": DEFAULT_WINDOW,
+        "state_rows": ensemble_spec(detectors, DEFAULT_WINDOW).rows,
         "chunk_t": chunk_t,
         "channels": channels,
         "samples": samples,
@@ -96,6 +115,13 @@ def run(channels: int, chunk_sizes, total_t: int, *, block_t: int = 256,
         fused["overhead_vs_single"] = (
             float(np.mean(singles)) / fused["samples_per_s"])
         rows.append(fused)
+        # informational rows: the opaque-region members and the full
+        # fused ensemble (their sequential lanes sit outside the K=3
+        # composability gate)
+        for sel in EXTRA_SELECTIONS:
+            rows.append(bench_one(sel, channels, chunk_t, total_t,
+                                  block_t=bt, interpret=interpret,
+                                  reps=reps))
     return rows
 
 

@@ -37,7 +37,7 @@ import sys
 ID_KEYS = ("bench", "backend", "chunk_t", "decode_t", "offered_load",
            "shape", "channels", "block_t", "block_c", "outputs",
            "pipeline_depth", "detector", "ensemble_k", "vote",
-           "shards")
+           "shards", "window", "state_rows")
 METRIC = "samples_per_s"
 
 

@@ -46,29 +46,45 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.detectors.hst import HstState, hst_scan
 from repro.detectors.rde import RdeState, rde_scan
+from repro.detectors.spec import (MOMENT_MEMBERS, Region, StateSpec,
+                                  ensemble_spec)
 from repro.detectors.teda import teda_detector_scan
+from repro.detectors.teda_q import TedaQMemberState, teda_q_member_scan
 from repro.detectors.zscore import ZscoreState, zscore_scan
 
 __all__ = ["DETECTORS", "DEFAULT_DETECTORS", "DEFAULT_WINDOW",
+           "MOMENT_MEMBERS", "Region", "StateSpec", "ensemble_spec",
            "aux_rows", "vote_threshold", "RdeState", "ZscoreState",
-           "rde_scan", "zscore_scan", "teda_detector_scan"]
+           "HstState", "TedaQMemberState", "rde_scan", "zscore_scan",
+           "teda_detector_scan", "hst_scan", "teda_q_member_scan"]
 
 #: canonical detector order — index d is bit d of the fused kernel's
-#: per-sample detector bitmask
+#: per-sample detector bitmask.  "teda"/"rde"/"zscore" share the moment
+#: fabric; "hst" and "teda-q" carry opaque `StateSpec` regions (the
+#: teda-q member additionally needs the backend's `fmt=QFormat(...)`).
 DETECTORS = {"teda": teda_detector_scan, "rde": rde_scan,
-             "zscore": zscore_scan}
+             "zscore": zscore_scan, "hst": hst_scan,
+             "teda-q": teda_q_member_scan}
 DEFAULT_DETECTORS = ("teda", "rde", "zscore")
 DEFAULT_WINDOW = 8
 VOTE_MODES = ("any", "majority", "all")
 
 
-def aux_rows(window: int = DEFAULT_WINDOW) -> int:
-    """Per-channel shared-state rows: W-deep S tail + W-deep S2 tail +
-    the TEDA variance carry (see module docs)."""
+def aux_rows(window: int = DEFAULT_WINDOW, detectors=None) -> int:
+    """Per-channel packed aux rows.
+
+    With `detectors=None` (the historical form): the shared moment
+    fabric alone — W-deep S tail + W-deep S2 tail + the TEDA variance
+    carry (see module docs).  With an ensemble tuple, the full
+    `StateSpec` row count including every member's opaque regions.
+    """
     if window < 1:
         raise ValueError(f"window must be >= 1, got {window}")
-    return 2 * int(window) + 1
+    if detectors is None:
+        return 2 * int(window) + 1
+    return ensemble_spec(detectors, window).rows
 
 
 def vote_threshold(vote, weights) -> float:

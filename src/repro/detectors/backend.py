@@ -11,14 +11,19 @@ engine options:
                        vote="majority", window=8)
     eng.attach([3], detectors=("rde",))   # slot 3 runs RDE alone
 
-The backend's packed state grows the `aux` block (`EngineState.aux`,
-`aux_rows` rows per channel — see `repro.detectors`); the packed
+The backend's packed state grows the `aux` block (`EngineState.aux`)
+whose per-channel row layout is the backend's `state_spec` — the
+`StateSpec` of `detectors/spec.py`: the shared moment fabric plus each
+non-moment member's opaque regions ("hst" mass tables, "teda-q" Q
+registers; the latter requires `fmt=QFormat(...)`).  The packed
 `mean`/`var` vectors are derived mirrors (running mean, TEDA variance)
 kept for introspection parity with the TEDA backends.  `process`
-returns a 6-tuple `(k', mean', var', aux', det_bits, vote)` — the
-engine routes `det_bits` out on the "ecc" channel (the backend-native
-score stream) and `vote` on "outlier", so the serving stack above the
-engine is structurally unchanged.
+returns a 7-tuple `(k', mean', var', aux', det_bits, vote, scores)` —
+the engine routes `det_bits` out on the "ecc" channel (the
+backend-native bit stream), `vote` on "outlier", and the (K, T, C)
+per-detector float `scores` on the new "scores" channel, so the
+serving stack above the engine stays structurally unchanged for
+existing callers while score streams ride along.
 """
 from __future__ import annotations
 
@@ -27,10 +32,10 @@ from typing import Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.detectors import (DEFAULT_DETECTORS, DEFAULT_WINDOW, aux_rows,
-                             vote_threshold)
+from repro.detectors import (DEFAULT_DETECTORS, DEFAULT_WINDOW,
+                             ensemble_spec, vote_threshold)
 from repro.detectors.ensemble import (EnsembleState, _check_detectors,
-                                      ensemble_scan)
+                                      _check_fmt, ensemble_scan)
 from repro.engine.backends import Backend
 
 __all__ = ["EnsembleBackend"]
@@ -44,7 +49,8 @@ class EnsembleBackend(Backend):
     runtime `sel` weight matrix the engine threads through
     `attach(detectors=...)`.  `vote` / `weights` set the default vote
     mode and per-detector weights (see `detectors.vote_threshold`);
-    `window` sizes the z-score window and the carried aux block.
+    `window` sizes the z-score/HST windows and the carried aux block;
+    `fmt` is the "teda-q" member's QFormat (required iff present).
     """
 
     name = "ensemble"
@@ -53,13 +59,18 @@ class EnsembleBackend(Backend):
     def __init__(self, m: float = 3.0,
                  detectors=DEFAULT_DETECTORS,
                  window: int = DEFAULT_WINDOW, vote="majority",
-                 weights=None, block_t: int = 256,
+                 weights=None, fmt=None, block_t: int = 256,
                  block_c: Optional[int] = None,
                  interpret: Optional[bool] = None, lane_pad: int = 128,
                  **_ignored):
         self.detectors = _check_detectors(detectors)
         self.window = int(window)
-        self.aux_rows = aux_rows(self.window)
+        self.fmt = _check_fmt(self.detectors, fmt)
+        #: the declarative per-member aux layout this backend carries —
+        #: engine init/reset, pool resize and shard migration are all
+        #: driven by it (raw element bits, opaque to those layers)
+        self.state_spec = ensemble_spec(self.detectors, self.window)
+        self.aux_rows = self.state_spec.rows
         self.vote = vote
         if weights is None:
             w = np.ones((len(self.detectors),), np.float32)
@@ -92,12 +103,13 @@ class EnsembleBackend(Backend):
                 sel=None, thr=None) -> Tuple[jnp.ndarray, ...]:
         """One fused (T, C) ensemble call.
 
-        `aux` is the packed shared-state block ((aux_rows, C)); `sel`
-        the (K, C) per-slot selection weights and `thr` the (C,) vote
-        thresholds (None: every detector at its default weight, the
-        backend's vote mode).  Returns (k', mean', var', aux',
-        det_bits, vote) — mean'/var' are the derived mirrors of the
-        aux rows (running mean; TEDA variance).
+        `aux` is the packed shared-state block ((state_spec.rows, C));
+        `sel` the (K, C) per-slot selection weights and `thr` the (C,)
+        vote thresholds (None: every detector at its default weight,
+        the backend's vote mode).  Returns (k', mean', var', aux',
+        det_bits, vote, scores) — mean'/var' are the derived mirrors of
+        the moment-fabric rows (running mean; TEDA variance), `scores`
+        the (K, T, C) per-detector float score streams.
         """
         if aux is None:
             raise ValueError(
@@ -113,10 +125,10 @@ class EnsembleBackend(Backend):
         final, out = ensemble_scan(
             x, self._m(m), EnsembleState(k=k, aux=aux),
             detectors=self.detectors, window=self.window, sel=sel,
-            thr=thr, valid_lens=valid_lens, block_t=self.block_t,
-            block_c=self.block_c, interpret=self.interpret,
-            lane_pad=self.lane_pad)
+            thr=thr, fmt=self.fmt, valid_lens=valid_lens,
+            block_t=self.block_t, block_c=self.block_c,
+            interpret=self.interpret, lane_pad=self.lane_pad)
         meanf = final.aux[self.window - 1] / jnp.maximum(final.k, 1.0)
         varf = final.aux[2 * self.window]
         return (final.k, meanf, varf, final.aux, out["det_flags"],
-                out["vote"])
+                out["vote"], out["scores"])

@@ -1,0 +1,115 @@
+"""Streaming half-space-tree detector — the first non-moment member.
+
+A fixed-depth half-space tree over a static input range is, for
+univariate streams, a perfect-binary partition of [lo, hi) into
+`HST_LEAVES` equal cells: the leaf index of a sample is the depth-3
+path of halving decisions, computable in closed form as
+`floor((x - lo) / cell)`.  The detector is the streaming-HS-tree mass
+scheme (Tan et al.; the fSEAD ensemble's tree member): two per-leaf
+mass tables per channel — the *reference* window's counts and the
+*currently filling* window's — plus a phase counter.  Each sample:
+
+  score  = ref[leaf(x)]         (mass of the reference window's cell)
+  flag   = filled & score * m < window     (low-mass cell = anomalous;
+           `filled` gates until the first full reference window exists)
+  cur[leaf(x)] += 1;  phase += 1
+  when phase == window * HST_LEAVES:  ref <- cur; cur <- 0; phase <- 0
+
+Every carried quantity is an exact small integer in float32 (counts
+never exceed `window * HST_LEAVES`), so this `lax.scan` oracle and the
+fused Pallas kernel's per-row loop produce *identical* bits — the
+conformance tests assert exact equality, not allclose.  State is not a
+running moment: in the packed `EngineState.aux` block the member owns
+the opaque `hst:ref` / `hst:cur` / `hst:phase` regions declared by
+`detectors/spec.py` — the point of the declarative state fabric.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.detectors.spec import HST_LEAVES, HST_RANGE
+
+__all__ = ["HstState", "hst_init", "hst_scan", "hst_leaf"]
+
+
+class HstState(NamedTuple):
+    """Per-channel carried window-mass state.
+
+    ref: (L, C) leaf masses of the last completed reference window;
+    cur: (L, C) masses of the window currently filling; phase: (C,)
+    samples absorbed into `cur` so far (0 .. window*L - 1).
+    """
+
+    ref: jnp.ndarray
+    cur: jnp.ndarray
+    phase: jnp.ndarray
+
+
+def hst_init(c: int, dtype=jnp.float32) -> HstState:
+    return HstState(ref=jnp.zeros((HST_LEAVES, c), dtype),
+                    cur=jnp.zeros((HST_LEAVES, c), dtype),
+                    phase=jnp.zeros((c,), dtype))
+
+
+def hst_leaf(x: jnp.ndarray) -> jnp.ndarray:
+    """Leaf index of each sample: the depth-log2(L) half-space path over
+    the static [lo, hi) range, clamped at the boundary cells (f32)."""
+    lo, hi = HST_RANGE
+    scale = float(HST_LEAVES) / (hi - lo)
+    return jnp.clip(jnp.floor((x - lo) * scale), 0.0,
+                    float(HST_LEAVES - 1))
+
+
+def hst_scan(x: jnp.ndarray, m=3.0, state: Optional[HstState] = None, *,
+             window: int = 8,
+             valid_lens=None) -> Tuple[HstState, dict]:
+    """Streaming HS-tree over x (T, C) — C independent channel streams.
+
+    Returns (final HstState, {"outlier": (T, C) bool, "score": (T, C)
+    reference-window leaf mass}).  `m` is a scalar or per-channel (C,)
+    sensitivity (flag when score * m < window, i.e. the sample's cell
+    held fewer than window/m of the reference window's window*L
+    samples).  `window` sizes the mass windows (window * HST_LEAVES
+    samples each).  `valid_lens` freezes each channel after its own
+    leading prefix — the engine's ragged contract.  Chunk-exact: the
+    carry is the exact table pair + phase, so any chunking reproduces
+    the single-shot run bit-for-bit.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    t_len, c = x.shape
+    if state is None:
+        state = hst_init(c)
+    wn = float(int(window) * HST_LEAVES)
+    mv = jnp.broadcast_to(jnp.asarray(m, jnp.float32), (c,))
+    if valid_lens is None:
+        valid = jnp.ones((t_len, c), bool)
+    else:
+        vlen = jnp.clip(jnp.asarray(valid_lens, jnp.float32), 0.0, t_len)
+        vlen = jnp.broadcast_to(vlen.reshape(-1) if vlen.ndim else vlen,
+                                (c,))
+        valid = (jnp.arange(t_len, dtype=jnp.float32)[:, None]
+                 < vlen[None, :])
+    leaves = jnp.arange(HST_LEAVES, dtype=jnp.float32)[:, None]  # (L, 1)
+
+    def step(carry, inp):
+        ref, cur, phase = carry
+        xr, v = inp
+        onehot = leaves == hst_leaf(xr)[None, :]          # (L, C)
+        score = jnp.sum(jnp.where(onehot, ref, 0.0), axis=0)
+        filled = jnp.sum(ref, axis=0) > 0.0
+        flag = v & filled & (score * mv < float(window))
+        cur1 = cur + jnp.where(onehot & v[None, :], 1.0, 0.0)
+        ph1 = phase + v.astype(jnp.float32)
+        flip = ph1 == wn
+        ref1 = jnp.where(flip[None, :], cur1, ref)
+        cur2 = jnp.where(flip[None, :], 0.0, cur1)
+        ph2 = jnp.where(flip, 0.0, ph1)
+        return (ref1, cur2, ph2), (flag, jnp.where(v, score, 0.0))
+
+    (ref, cur, phase), (outlier, score) = jax.lax.scan(
+        step, (state.ref, state.cur, state.phase), (x, valid))
+    return (HstState(ref=ref, cur=cur, phase=phase),
+            {"outlier": outlier, "score": score})

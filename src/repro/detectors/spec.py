@@ -1,0 +1,186 @@
+"""Declarative per-member detector-state layout (`StateSpec`).
+
+PR 8's fused ensemble kernel hard-coded one aux-row formula
+(`aux_rows(window) = 2*window + 1`): the shared moment fabric every
+member consumed.  A detector whose state is *not* a running moment — a
+half-space-tree node table, a quantized TEDA register pair — could not
+join the ensemble because nothing in the stack could describe, carry,
+or migrate its rows.  This module is that description.
+
+A `StateSpec` is an ordered tuple of named `Region`s, each a contiguous
+strip of per-channel rows inside the packed `EngineState.aux` block:
+
+  * `rows`  — the region's row count (static).
+  * `tag`   — the *element* dtype of the payload: "f32" rows hold plain
+    float32 values; "i32" rows hold int32 payloads stored **bitcast**
+    into the float32 aux array (`i32_to_f32_bits` / `f32_to_i32_bits`).
+    The bitcast convention is what makes migration trivial: every layer
+    that moves aux columns (bucket resize in `engine/pool.py`, shard
+    moves in `engine/sharded.py`, the engine's `jnp.where` reset/freeze
+    selects) is a raw element copy, so opaque regions ride along
+    bit-exactly with no per-member code anywhere outside the kernel.
+
+`ensemble_spec(detectors, window)` builds the layout for one ensemble:
+the shared moment fabric first (rows [0, 2W] — the PR 8 layout, kept
+byte-identical so moment-only ensembles carry exactly the same aux
+block as before), then one opaque region group per non-moment member in
+detector order.  Region init is zeros for every member (a fresh stream
+has absorbed nothing), so `init_aux` = raw zero bits for both tags.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Region", "StateSpec", "ensemble_spec", "member_regions",
+           "MOMENT_MEMBERS", "HST_LEAVES", "HST_RANGE",
+           "f32_to_i32_bits", "i32_to_f32_bits"]
+
+#: members whose state *is* the shared moment fabric (prefix-sum tails
+#: + the TEDA variance recursion) — they own no opaque region
+MOMENT_MEMBERS = ("teda", "rde", "zscore")
+
+#: half-space-tree histogram resolution: leaves per channel (depth-3
+#: balanced tree over a static input range), and that range
+HST_LEAVES = 8
+HST_RANGE = (-4.0, 4.0)
+
+
+class Region(NamedTuple):
+    """One named contiguous strip of per-channel aux rows.
+
+    `tag` is the payload element dtype: "f32" (plain float rows) or
+    "i32" (int32 payload bitcast into the f32 aux array — see module
+    docs).  Migration is always a raw element copy regardless of tag.
+    """
+
+    name: str
+    rows: int
+    tag: str = "f32"
+
+
+class StateSpec(NamedTuple):
+    """Ordered, hashable layout of one ensemble's packed aux block."""
+
+    regions: Tuple[Region, ...]
+
+    @property
+    def rows(self) -> int:
+        """Total per-channel aux rows."""
+        return sum(r.rows for r in self.regions)
+
+    def offset(self, name: str) -> int:
+        """Start row of region `name` (raises KeyError when absent)."""
+        off = 0
+        for r in self.regions:
+            if r.name == name:
+                return off
+            off += r.rows
+        raise KeyError(f"no region {name!r} in {self.names()}")
+
+    def region(self, name: str) -> Region:
+        for r in self.regions:
+            if r.name == name:
+                return r
+        raise KeyError(f"no region {name!r} in {self.names()}")
+
+    def slc(self, name: str) -> slice:
+        """Static row slice of region `name` inside the aux block."""
+        off = self.offset(name)
+        return slice(off, off + self.region(name).rows)
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(r.name for r in self.regions)
+
+    def has(self, name: str) -> bool:
+        return any(r.name == name for r in self.regions)
+
+    def init_aux(self, c: int, dtype=jnp.float32) -> jnp.ndarray:
+        """Fresh packed aux block for C channels.
+
+        Every region initializes to zeros — and the zero bit pattern is
+        0 for both f32 and i32 payloads, so the block is plain f32
+        zeros regardless of tags (the property the pool's column-fill
+        and the engine's `jnp.where` reset rely on).
+        """
+        return jnp.zeros((self.rows, c), dtype)
+
+    def validate_aux(self, aux, c: int) -> None:
+        """Raise unless `aux` has this layout's (rows, C) shape."""
+        shape = tuple(jnp.shape(aux))
+        if shape != (self.rows, c):
+            raise ValueError(
+                f"state.aux must be ({self.rows}, {c}) for layout "
+                f"{self.names()}, got {shape}")
+
+
+def f32_to_i32_bits(x: jnp.ndarray) -> jnp.ndarray:
+    """Reinterpret f32 aux rows as their int32 payload (no conversion)."""
+    return jax.lax.bitcast_convert_type(x, jnp.int32)
+
+
+def i32_to_f32_bits(x: jnp.ndarray) -> jnp.ndarray:
+    """Reinterpret an int32 payload as raw f32 aux rows (no conversion)."""
+    return jax.lax.bitcast_convert_type(x.astype(jnp.int32), jnp.float32)
+
+
+def _moment_regions(window: int) -> Tuple[Region, ...]:
+    """The PR 8 shared fabric, byte-identical row order: W rows of
+    running-sum prefix tail, W rows of the sum-of-squares twin, one
+    TEDA variance-recursion carry row."""
+    w = int(window)
+    if w < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
+    return (Region("moment:s", w), Region("moment:s2", w),
+            Region("moment:var", 1))
+
+
+def _hst_regions(window: int) -> Tuple[Region, ...]:
+    """Streaming half-space-tree member: two leaf-mass tables per
+    channel (reference window + currently-filling window) plus the
+    within-window phase counter, all exact small-integer counts held in
+    f32 rows (no value ever exceeds window * HST_LEAVES)."""
+    return (Region("hst:ref", HST_LEAVES), Region("hst:cur", HST_LEAVES),
+            Region("hst:phase", 1))
+
+
+def _teda_q_regions(window: int) -> Tuple[Region, ...]:
+    """Bit-accurate Q-format TEDA member: the MEAN and VARIANCE module
+    registers as int32 Q-values, bitcast into the f32 aux block."""
+    return (Region("teda-q:mean", 1, "i32"), Region("teda-q:var", 1, "i32"))
+
+
+#: per-member opaque-region builders; moment members are absent (their
+#: state is the shared fabric)
+MEMBER_REGIONS: Dict[str, Callable[[int], Tuple[Region, ...]]] = {
+    "hst": _hst_regions,
+    "teda-q": _teda_q_regions,
+}
+
+
+def member_regions(name: str, window: int) -> Tuple[Region, ...]:
+    """Opaque regions member `name` owns (empty for moment members)."""
+    if name in MOMENT_MEMBERS:
+        return ()
+    try:
+        return MEMBER_REGIONS[name](window)
+    except KeyError:
+        raise KeyError(f"unknown ensemble member {name!r}") from None
+
+
+def ensemble_spec(detectors, window: int) -> StateSpec:
+    """The packed aux layout of one ensemble.
+
+    The shared moment fabric always occupies rows [0, 2W] — even for
+    ensembles with no moment member, so the engine's derived mean/var
+    mirrors and the kernel's carry discipline stay unconditional — and
+    each non-moment member's opaque regions follow in detector order.
+    Moment-only ensembles therefore keep the exact PR 8 aux shape
+    (`2*window + 1` rows).
+    """
+    regions = list(_moment_regions(window))
+    for name in detectors:
+        regions.extend(member_regions(name, window))
+    return StateSpec(regions=tuple(regions))

@@ -1,0 +1,115 @@
+"""TEDA-Q ensemble member: the bit-accurate Q-format path as a voter.
+
+The fused float ensemble could not include the paper's actual
+fixed-point datapath — its state (Q int32 MEAN/VARIANCE registers) is
+not a float moment, and `fixedpoint.teda_q_scan_chan` speaks neither
+the ragged `valid_lens` contract nor the detector `(state, {"outlier",
+"score"})` contract.  This module is both: a `lax.scan` over exactly
+the `_q_step_u` the Q kernels execute, with per-channel prefix freeze,
+returning the dequantized eccentricity as the member's score stream.
+
+In the fused kernel the member owns the opaque `teda-q:mean` /
+`teda-q:var` aux regions (int32 payloads bitcast into the f32 block —
+`detectors/spec.py`), and its lane replays the `teda_q_scan` kernel's
+divider-hoisted schedule through `kernels/qdiv.py`; this oracle is the
+bit-exactness target for that lane (exact equality on flags and on the
+raw Q eccentricity, hence on the dequantized score).
+
+The m^2+1 ROM constant is quantized through the format's *float32*
+quantizer from the per-channel f32 `m` carry — the kernel receives m
+the same way, so both sides compute identical msq1 bits by
+construction (`msq1_const`'s host-double path is unreachable from
+inside a kernel).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.fixedpoint.qformat import QFormat
+from repro.fixedpoint.teda_q import _q_counter_terms, _q_step_u
+
+__all__ = ["TedaQMemberState", "teda_q_member_init", "teda_q_member_scan",
+           "member_msq1"]
+
+_I32 = jnp.int32
+
+
+class TedaQMemberState(NamedTuple):
+    """Per-channel carried Q registers: k (C,) int32 sample count,
+    mean/var (C,) int32 Q-values."""
+
+    k: jnp.ndarray
+    mean: jnp.ndarray
+    var: jnp.ndarray
+
+
+def teda_q_member_init(c: int) -> TedaQMemberState:
+    z = jnp.zeros((c,), _I32)
+    return TedaQMemberState(k=z, mean=z, var=z)
+
+
+def member_msq1(fmt: QFormat, m) -> jnp.ndarray:
+    """The OUTLIER ROM constant exactly as the fused kernel derives it:
+    float32 quantization of m^2 + 1 from the f32 m carry."""
+    mf = jnp.asarray(m, jnp.float32)
+    return fmt.quantize(mf * mf + 1.0)
+
+
+def teda_q_member_scan(x: jnp.ndarray, fmt: QFormat, m=3.0,
+                       state: Optional[TedaQMemberState] = None, *,
+                       valid_lens=None
+                       ) -> Tuple[TedaQMemberState, dict]:
+    """Q-format TEDA over x (T, C) with the engine's ragged contract.
+
+    Returns (final TedaQMemberState, {"outlier": (T, C) bool, "score":
+    (T, C) f32 dequantized eccentricity, "ecc": (T, C) raw Q int32}).
+    Float input is quantized through `fmt`; int32 input is taken as
+    already-quantized Q values.  `m` is a scalar or per-channel (C,)
+    f32 sensitivity.  `valid_lens` freezes each channel's Q registers
+    after its own leading prefix; flags and scores are zero beyond it.
+    Chunk-exact and bit-exact: the carry is the exact register pair,
+    every row's update is `_q_step_u`.
+    """
+    fmt.validate()
+    if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating):
+        xq = fmt.quantize(jnp.asarray(x, jnp.float32))
+    else:
+        xq = jnp.asarray(x, _I32)
+    t_len, c = xq.shape
+    if state is None:
+        state = teda_q_member_init(c)
+    msq1 = jnp.broadcast_to(member_msq1(fmt, m), (c,))
+    if valid_lens is None:
+        valid = jnp.ones((t_len, c), bool)
+    else:
+        vlen = jnp.clip(jnp.asarray(valid_lens, _I32), 0, t_len)
+        vlen = jnp.broadcast_to(vlen.reshape(-1) if vlen.ndim else vlen,
+                                (c,))
+        valid = jnp.arange(t_len, dtype=_I32)[:, None] < vlen[None, :]
+
+    # hoist the counter-only dividers (the Q kernels' schedule): the
+    # instant of row t is k0 + t + 1 — validity is a leading prefix, so
+    # within it the row index *is* the sample count, and beyond it the
+    # frozen carry masks every output anyway
+    ks = state.k[None, :] + jnp.arange(1, t_len + 1, dtype=_I32)[:, None]
+    terms = _q_counter_terms(fmt, ks, msq1)
+
+    def body(carry, inp):
+        mean, var = carry
+        kk, xr, v, rk, inv_k, thr_k = inp
+        mean_n, var_n, ecc, _zeta, _thr, outl = _q_step_u(
+            fmt, kk, mean, var, xr, msq1, terms=(rk, inv_k, thr_k))
+        flag = jnp.broadcast_to(outl, xr.shape) & v
+        score = jnp.where(v, fmt.dequantize(ecc), 0.0)
+        eccq = jnp.where(v, ecc, 0)
+        return ((jnp.where(v, mean_n, mean), jnp.where(v, var_n, var)),
+                (flag, score, eccq))
+
+    (mean_f, var_f), (outlier, score, eccq) = jax.lax.scan(
+        body, (state.mean, state.var), (ks, xq, valid) + terms)
+    n_valid = jnp.sum(valid.astype(_I32), axis=0)
+    final = TedaQMemberState(k=state.k + n_valid, mean=mean_f, var=var_f)
+    return final, {"outlier": outlier, "score": score, "ecc": eccq}

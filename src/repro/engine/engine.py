@@ -126,7 +126,7 @@ class StreamEngine:
                     x, self.backend, m=m, valid_lens=vlen, sel=sel,
                     thr=thr)
                 return ((st.k, st.mean, st.var, st.aux),
-                        (outs["ecc"], outs["outlier"]))
+                        (outs["ecc"], outs["outlier"], outs["scores"]))
         else:
             def core(x, k, mean, var, vlen, m):
                 st, outs = engine_process(
@@ -385,7 +385,7 @@ class StreamEngine:
             mv = mv[0]
         self._account(t_len, vc, valid_lens is not None, active)
         if self._ensemble:
-            (k, mean, var, aux), (bits, vote) = self._fn(
+            (k, mean, var, aux), (bits, vote, scores) = self._fn(
                 x, st.k, st.mean, st.var, st.aux, vl,
                 jnp.asarray(self.backend.quantize_m(mv)),
                 jnp.asarray(self._det_w), jnp.asarray(self._det_thr))
@@ -393,8 +393,10 @@ class StreamEngine:
                                      active=st.active, aux=aux)
             # det_flags doubles as the backend-native "ecc" stream so
             # the serving stack's fetch plumbing stays structurally
-            # unchanged; both keys alias the same array
-            return {"ecc": bits, "outlier": vote, "det_flags": bits}
+            # unchanged; both keys alias the same array.  "scores" is
+            # the (K, T, C) per-detector float score-stream block.
+            return {"ecc": bits, "outlier": vote, "det_flags": bits,
+                    "scores": scores}
         (k, mean, var), (ecc, outlier) = self._fn(
             x, st.k, st.mean, st.var, vl,
             jnp.asarray(self.backend.quantize_m(mv)))

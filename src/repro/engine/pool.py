@@ -142,7 +142,13 @@ class SlotPool:
             out[:keep] = v
             return jnp.asarray(out)
 
-        def pad2(v):  # (R, C) detector-axis aux: pad the slot axis
+        def pad2(v):
+            # (R, C) detector-axis aux: pad the slot axis.  A raw host
+            # copy of whatever rows the backend's StateSpec declares —
+            # element *bits* carry over untouched, which is the aux
+            # migration contract: opaque regions (e.g. the teda-q
+            # member's int32 Q registers bitcast into the f32 block,
+            # some of which alias NaN patterns) survive resizes exactly.
             v = np.asarray(v)[:, :keep]
             out = np.zeros((v.shape[0], bucket), v.dtype)
             out[:, :keep] = v

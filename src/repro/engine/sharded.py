@@ -319,6 +319,10 @@ class ShardedPool:
         float32 words copy exactly, so the stream's future verdicts
         are identical to never having moved (the same re-pad guarantee
         `SlotPool._resize` gives across buckets, across shards).  The
+        aux column is opaque here: whatever regions the backend's
+        `StateSpec` declares (moment tails, HST mass tables, bitcast
+        int32 Q registers — including payloads that alias f32 NaN
+        patterns) move as raw element bits, never through arithmetic.  The
         destination is acquired *before* the source releases: a full
         destination raises `PoolFull` and leaves the stream in place.
         """

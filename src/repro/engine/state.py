@@ -147,9 +147,11 @@ def engine_process(state: EngineState, x: jnp.ndarray, backend,
 
     Aux-carrying backends (`backend.aux_rows > 0`, i.e. the ensemble)
     take the extra per-slot `sel` selection weights / `thr` vote
-    thresholds and return a 6-tuple — `ecc` is then the per-detector
-    flag bitmask and `outlier` the fused vote; the aux block freezes
-    with the same masks as k/mean/var.
+    thresholds and return a 7-tuple — `ecc` is then the per-detector
+    flag bitmask, `outlier` the fused vote, and the output dict grows
+    "scores": the (K, T, C) per-detector float score streams (zeroed
+    on frozen/inactive slots); the aux block freezes with the same
+    masks as k/mean/var.
     """
     if getattr(backend, "aux_rows", 0):
         return _engine_process_aux(state, x, backend, m, valid_lens,
@@ -193,7 +195,7 @@ def _engine_process_aux(state: EngineState, x, backend, m, valid_lens,
     the uniform leg gates on `active` exactly like the TEDA leg.
     """
     if valid_lens is None:
-        kf, mf, vf, auxf, bits, vote = backend.process(
+        kf, mf, vf, auxf, bits, vote, scores = backend.process(
             x, state.k, state.mean, state.var, aux=state.aux, m=m,
             sel=sel, thr=thr)
         act = state.active
@@ -204,11 +206,12 @@ def _engine_process_aux(state: EngineState, x, backend, m, valid_lens,
             active=act,
             aux=jnp.where(act[None, :], auxf, state.aux))
         outs = {"ecc": jnp.where(act[None, :], bits, 0),
-                "outlier": jnp.logical_and(vote, act[None, :])}
+                "outlier": jnp.logical_and(vote, act[None, :]),
+                "scores": jnp.where(act[None, None, :], scores, 0.0)}
         return new, outs
 
     vl = jnp.asarray(valid_lens, jnp.int32)
-    kf, mf, vf, auxf, bits, vote = backend.process(
+    kf, mf, vf, auxf, bits, vote, scores = backend.process(
         x, state.k, state.mean, state.var, aux=state.aux, m=m,
         valid_lens=vl, sel=sel, thr=thr)
     adv = vl > 0
@@ -221,7 +224,8 @@ def _engine_process_aux(state: EngineState, x, backend, m, valid_lens,
     rows = jnp.arange(x.shape[0], dtype=vl.dtype)[:, None]
     live = rows < vl[None, :]
     outs = {"ecc": jnp.where(live, bits, 0),
-            "outlier": jnp.logical_and(vote, live)}
+            "outlier": jnp.logical_and(vote, live),
+            "scores": jnp.where(live[None], scores, 0.0)}
     return new, outs
 
 

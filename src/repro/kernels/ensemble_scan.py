@@ -2,42 +2,47 @@
 
 One (chunk_t, C) call on the PR 7 2-D `(channel-block, time-block)`
 grid evaluates every detector of the ensemble (`repro.detectors`) for
-every channel, on ONE shared streaming fabric — the fSEAD structure:
-the detectors share their carried state (running sum, running sum of
-squares, windowed prefix-sum tails, the TEDA variance recursion), so
-adding a detector costs its elementwise score arithmetic, not another
-pass over the stream.
+every channel.  The carried state is no longer a fixed 2W+1 moment
+formula: it is the `StateSpec` layout from `detectors/spec.py` — the
+shared moment fabric (prefix-sum tails + the TEDA variance recursion)
+in rows [0, 2W], then one opaque `(rows_k, C)` region group per
+non-moment member, in detector order.  The whole block lives in ONE
+`(spec.rows, block_c)` VMEM scratch tile, re-seeded from `aux` at each
+strip's first time block and written back once at its last (the
+carry/donation discipline of `teda_scan.py`).
 
-Per (block_t, block_c) tile the kernel computes:
+Per (block_t, block_c) tile the kernel runs a per-member state-advance
+dispatch:
 
-  * the masked prefix sum S (Hillis-Steele doubling — the same
-    `_cumsum_rows` the TEDA kernel uses, so the TEDA lane is
-    bit-identical to `teda_scan.py` at equal block_t),
-  * the sum-of-squares prefix S2 (one more doubling scan; only when
-    RDE or z-score is in the static `detectors` tuple),
-  * the TEDA variance affine scan (only when "teda" is in it),
-  * per-detector flags:  TEDA eq (6); RDE's m-sigma gate on the biased
-    running moments; the windowed z-score via prefix-sum differences
-    S_k - S_{k-W} against the carried W-deep tails,
-  * the (T, C) int32 detector bitmask (bit d = detector d flagged,
-    masked by that channel's selection weight and ragged validity),
-  * the (T, C) weighted-vote verdict: sum_d w_d * flag_d >= thr[c],
-    accumulated in detector order d = 0..K-1 in float32 — the exact
-    order a host recomputation from the emitted bitmask must use.
+  * moment members (teda / rde / zscore) share the masked prefix sum S
+    (Hillis-Steele `_cumsum_rows`), the S2 twin, and the TEDA affine
+    variance scan — the EXACT arithmetic of the PR 8 kernel, reading
+    and writing the same aux rows, so moment-only ensembles are
+    bit/array-identical to it (and the TEDA lane to `teda_scan.py`);
+  * "hst" advances its opaque leaf-mass tables + phase row with a
+    sequential per-row loop of exact small-integer f32 ops — identical
+    bits to the `detectors/hst.py` oracle;
+  * "teda-q" advances its opaque int32 Q registers (bitcast in the f32
+    aux block) on the `teda_q_scan.py` divider-hoisted schedule through
+    `kernels/qdiv.py` — bit-exact with the `detectors/teda_q.py`
+    oracle, including the in-kernel f32 quantization of the m^2+1 ROM
+    constant from the per-channel m carry.
 
-Carried state is the `EngineState.aux` block (see `repro.detectors`
-module docs for the row layout): W rows of S tail + W rows of S2 tail
-+ 1 TEDA variance row, all (1, block_c)-strip scratch inside the
-kernel, re-seeded at each strip's first time block and written back
-once at its last (same carry/donation discipline as `teda_scan.py`:
-`k0` aliases the final-k output, `aux` aliases the final-aux output).
+Outputs per call: the (T, C) int32 detector bitmask (bit d = detector
+d flagged, masked by selection weight and ragged validity), the (T, C)
+weighted-vote verdict (sum_d w_d * flag_d >= thr[c], accumulated in
+detector order in float32 — the exact order a host recomputation from
+the emitted bitmask must use; the Q member's flag enters the same f32
+accumulation, which is what makes the Q-path vote host-recomputable
+bit-exactly), and K per-detector (T, C) float32 SCORE streams (TEDA
+eccentricity, RDE Cauchy density, squared z-score, HST reference-cell
+mass, dequantized Q eccentricity — zero on invalid rows).
 
 Selection (`sel`, (K, C) weights; 0 = unselected) gates only flags and
-the vote — state always advances for every detector, which is what
-makes a detector-masked slot bit-identical to a single-detector run of
-the same stream.  Ragged `vlen` semantics are the TEDA kernel's:
-validity is a per-channel prefix, invalid rows contribute nothing to
-any carry, no detector flags beyond a channel's vlen.
+the vote — state always advances for every member, which is what makes
+a detector-masked slot bit-identical to a single-detector run of the
+same stream.  Ragged `vlen` semantics are the TEDA kernel's: validity
+is a per-channel prefix, invalid rows advance nothing.
 """
 from __future__ import annotations
 
@@ -48,28 +53,151 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.detectors.spec import (HST_LEAVES, HST_RANGE, MOMENT_MEMBERS,
+                                  ensemble_spec, f32_to_i32_bits,
+                                  i32_to_f32_bits)
+from repro.fixedpoint.qformat import sat_add, sat_mul, sat_sub
+from repro.kernels.qdiv import fast_div_qi, fast_div_qq
 from repro.kernels.teda_scan import (_affine_scan_rows, _cumsum_rows,
                                      block_spec, tpu_compiler_params)
 
 __all__ = ["ensemble_scan_kernel", "ensemble_pallas_call"]
 
 
+def _row(a, r):
+    return jax.lax.dynamic_slice_in_dim(a, r, 1, 0)
+
+
+def _hst_lane(state, spec, x, valid, m, *, window: int):
+    """Advance the "hst" opaque regions; returns (flags, scores).
+
+    Sequential per-row loop (the window flip is a data-dependent state
+    machine, not a scan), but every op is an exact small-integer f32
+    add/compare — identical bits to the `hst_scan` oracle step.
+    """
+    bt, bc = x.shape
+    ell = HST_LEAVES
+    off = spec.offset("hst:ref")
+    ref0 = state[off:off + ell, :]
+    cur0 = state[off + ell:off + 2 * ell, :]
+    ph0 = state[off + 2 * ell:off + 2 * ell + 1, :]
+    lo, hi = HST_RANGE
+    scale = float(ell) / (hi - lo)
+    lf = jnp.clip(jnp.floor((x - lo) * scale), 0.0, float(ell - 1))
+    leaves = jax.lax.broadcasted_iota(jnp.float32, (ell, 1), 0)
+    wn = float(int(window) * ell)
+    zero = jnp.zeros((bt, bc), jnp.float32)
+
+    def body(r, carry):
+        ref, cur, ph, scores, flags = carry
+        lf_r = _row(lf, r)                         # (1, bc)
+        v_r = _row(valid, r)                       # (1, bc) bool
+        onehot = leaves == lf_r                    # (ell, bc)
+        score = jnp.sum(jnp.where(onehot, ref, 0.0), axis=0,
+                        keepdims=True)
+        filled = jnp.sum(ref, axis=0, keepdims=True) > 0.0
+        flag = v_r & filled & (score * m < float(window))
+        cur1 = cur + jnp.where(onehot & v_r, 1.0, 0.0)
+        ph1 = ph + v_r.astype(jnp.float32)
+        flip = ph1 == wn
+        ref1 = jnp.where(flip, cur1, ref)
+        cur2 = jnp.where(flip, 0.0, cur1)
+        ph2 = jnp.where(flip, 0.0, ph1)
+        scores = jax.lax.dynamic_update_slice(
+            scores, jnp.where(v_r, score, 0.0), (r, 0))
+        flags = jax.lax.dynamic_update_slice(
+            flags, flag.astype(jnp.float32), (r, 0))
+        return ref1, cur2, ph2, scores, flags
+
+    ref_f, cur_f, ph_f, scores, flags = jax.lax.fori_loop(
+        0, bt, body, (ref0, cur0, ph0, zero, zero))
+    state[off:off + ell, :] = ref_f
+    state[off + ell:off + 2 * ell, :] = cur_f
+    state[off + 2 * ell:off + 2 * ell + 1, :] = ph_f
+    return flags > 0.0, scores
+
+
+def _teda_q_lane(state, spec, x, valid, k, m, fmt):
+    """Advance the "teda-q" opaque Q registers; returns (flags, scores).
+
+    The `teda_q_scan.py` kernel's rescheduled datapath on the member's
+    bitcast int32 regions: every counter-only divider (rk=(k-1)/k, 1/k,
+    thr=(m^2+1)/2k) and the sample divider x/k run as whole-block
+    passes through the host-width exact divider image
+    (`kernels/qdiv.py`); the MEAN and VARIANCE recurrences are two slim
+    saturating multiply-add row loops with ragged carry freeze.
+    Bit-exact with `_q_step_u` (hence the `teda_q_member_scan` oracle):
+    each element sees the same inputs and operation order, with the
+    k=1 overrides folded into the hoisted terms (rk = 0 and x/1 = x).
+    """
+    bt, bc = x.shape
+    i32 = jnp.int32
+    offm = spec.offset("teda-q:mean")
+    offv = spec.offset("teda-q:var")
+    mean0 = f32_to_i32_bits(state[offm:offm + 1, :])
+    var0 = f32_to_i32_bits(state[offv:offv + 1, :])
+    xq = fmt.quantize(x)                    # (bt, bc) int32 Q
+    msq1 = fmt.quantize(m * m + 1.0)        # (1, bc) — the f32 m carry
+    kv = k.astype(i32)                      # exact: k < 2^24
+    first = kv <= 1
+
+    rk_b = fast_div_qq(fmt, kv - 1, kv)
+    inv_b = fast_div_qi(fmt, jnp.broadcast_to(i32(fmt.one), kv.shape), kv)
+    thr_b = fast_div_qi(fmt, jnp.broadcast_to(msq1, kv.shape), 2 * kv)
+    xk_b = fast_div_qi(fmt, xq, kv)
+    zero = jnp.zeros((bt, bc), i32)
+
+    def mean_row(r, carry):
+        mean, bank = carry
+        mean_n = sat_add(fmt, sat_mul(fmt, _row(rk_b, r), mean),
+                         _row(xk_b, r))
+        bank = jax.lax.dynamic_update_slice(bank, mean_n, (r, 0))
+        return jnp.where(_row(valid, r), mean_n, mean), bank
+
+    mean_f, mean_b = jax.lax.fori_loop(0, bt, mean_row, (mean0, zero))
+
+    d_b = sat_sub(fmt, xq, mean_b)
+    d2_b = sat_mul(fmt, d_b, d_b)
+    e_b = jnp.where(first, 0, fast_div_qi(fmt, d2_b, kv))
+
+    def var_row(r, carry):
+        var, bank = carry
+        var_n = sat_add(fmt, sat_mul(fmt, _row(rk_b, r), var),
+                        _row(e_b, r))
+        bank = jax.lax.dynamic_update_slice(bank, var_n, (r, 0))
+        return jnp.where(_row(valid, r), var_n, var), bank
+
+    var_f, var_b = jax.lax.fori_loop(0, bt, var_row, (var0, zero))
+
+    safe = var_b > 0
+    ratio = fast_div_qq(fmt, d2_b, jnp.where(safe, var_b, 1))
+    ecc = sat_add(fmt, inv_b,
+                  jnp.where(safe, fast_div_qi(fmt, ratio, kv), 0))
+    flags = ((ecc >> 1) > thr_b) & (kv >= 2)
+    scores = jnp.where(valid, fmt.dequantize(ecc), 0.0)
+    state[offm:offm + 1, :] = i32_to_f32_bits(mean_f)
+    state[offv:offv + 1, :] = i32_to_f32_bits(var_f)
+    return flags, scores
+
+
 def ensemble_scan_kernel(x_ref, vlen_ref, k0_ref, m_ref, thr_ref, sel_ref,
                          aux_ref, bits_ref, vote_ref, fk_ref, aux_out_ref,
-                         tail_s, tail_s2, var_c, *, block_t: int,
-                         window: int, detectors: tuple):
+                         *rest, block_t: int, window: int,
+                         detectors: tuple, fmt=None):
+    score_refs = rest[:-1]          # K per-detector (bt, bc) f32 outputs
+    state = rest[-1]                # the (spec.rows, bc) scratch tile
+    spec = ensemble_spec(detectors, window)
     w = window
+    moment = any(d in MOMENT_MEMBERS for d in detectors)
     need_s2 = ("rde" in detectors) or ("zscore" in detectors)
     i = pl.program_id(1)  # time block (sequential, carry-chained)
 
-    # a new channel strip restarts the time sweep: re-seed its carries
-    # from the aux block (rows [0, W) = S tail, [W, 2W) = S2 tail,
-    # row 2W = TEDA variance)
+    # a new channel strip restarts the time sweep: re-seed the whole
+    # spec block from aux — a raw f32 copy, so the bitcast i32 regions'
+    # payloads survive untouched
     @pl.when(i == 0)
     def _init():
-        tail_s[...] = aux_ref[0:w, :].astype(jnp.float32)
-        tail_s2[...] = aux_ref[w:2 * w, :].astype(jnp.float32)
-        var_c[...] = aux_ref[2 * w:2 * w + 1, :].astype(jnp.float32)
+        state[...] = aux_ref[...]
 
     x = x_ref[...].astype(jnp.float32)        # (bt, bc)
     bt, c = x.shape
@@ -83,12 +211,14 @@ def ensemble_scan_kernel(x_ref, vlen_ref, k0_ref, m_ref, thr_ref, sel_ref,
     k = k0 + g + 1.0                   # per-channel iteration index
     m2 = m * m
 
-    # ---- shared MEAN fabric: one prefix sum feeds every detector -------
-    s = _cumsum_rows(jnp.where(valid, x, 0.0)) + tail_s[w - 1:w, :]
-    mean = s / k
-    dr = (x - mean) ** 2               # raw distance to the running mean
+    flags, scores = {}, {}
+    if moment:
+        # ---- shared MEAN fabric: one prefix sum feeds every moment
+        # member (aux rows [0, 2W] — the PR 8 arithmetic, verbatim) ----
+        s = _cumsum_rows(jnp.where(valid, x, 0.0)) + state[w - 1:w, :]
+        mean = s / k
+        dr = (x - mean) ** 2           # raw distance to the running mean
 
-    flags = {}
     if "teda" in detectors:
         # eq (3) affine scan + eqs (1)/(5)/(6) — the exact arithmetic of
         # `teda_scan_kernel`, so this lane's flags are bit-identical to
@@ -98,30 +228,34 @@ def ensemble_scan_kernel(x_ref, vlen_ref, k0_ref, m_ref, thr_ref, sel_ref,
         a = jnp.broadcast_to(jnp.where(first, 0.0, (k - 1.0) / k), (bt, c))
         a = jnp.where(valid, a, 1.0)   # identity map on padded rows
         av, bv = _affine_scan_rows(a, d2 / k)
-        var = av * var_c[...] + bv
+        var = av * state[2 * w:2 * w + 1, :] + bv
         safe = var > 0.0
         ecc = 1.0 / k + jnp.where(safe,
                                   d2 / (k * jnp.where(safe, var, 1.0)), 0.0)
         flags["teda"] = jnp.logical_and(ecc * 0.5 > (m2 + 1.0) / (2.0 * k),
                                         k >= 2.0)
-        var_c[...] = var[block_t - 1:block_t]
+        scores["teda"] = ecc
+        state[2 * w:2 * w + 1, :] = var[block_t - 1:block_t]
 
     if need_s2:
         s2 = (_cumsum_rows(jnp.where(valid, x * x, 0.0))
-              + tail_s2[w - 1:w, :])
+              + state[2 * w - 1:2 * w, :])
 
     if "rde" in detectors:
         # biased variance from the running moments (Angelov's RDE)
         meanr = s / k
         varb = s2 / k - meanr * meanr
         flags["rde"] = (varb > 0.0) & (k >= 2.0) & (dr > m2 * varb)
+        okr = varb > 0.0
+        scores["rde"] = 1.0 / (1.0 + jnp.where(
+            okr, dr / jnp.where(okr, varb, 1.0), 0.0))
 
     if "zscore" in detectors:
         # windowed moments as prefix-sum differences against the W-deep
         # carried tails: s_full[p] = S_{k_blockstart + p - W + 1}, so the
         # lag row S_{k - W} of in-block row r is s_full[r]
-        s_full = jnp.concatenate([tail_s[...], s], axis=0)    # (W+bt, c)
-        s2_full = jnp.concatenate([tail_s2[...], s2], axis=0)
+        s_full = jnp.concatenate([state[0:w, :], s], axis=0)  # (W+bt, c)
+        s2_full = jnp.concatenate([state[w:2 * w, :], s2], axis=0)
         winsum = s - s_full[:bt]
         winsq = s2 - s2_full[:bt]
         n = jnp.minimum(k, float(w))
@@ -129,6 +263,9 @@ def ensemble_scan_kernel(x_ref, vlen_ref, k0_ref, m_ref, thr_ref, sel_ref,
         sigw = winsq / n - muw * muw
         dz = (x - muw) ** 2
         flags["zscore"] = (sigw > 0.0) & (k >= 2.0) & (dz > m2 * sigw)
+        okz = sigw > 0.0
+        scores["zscore"] = jnp.where(okz, dz / jnp.where(okz, sigw, 1.0),
+                                     0.0)
         # advance the tails to the valid extent of this block: new tail
         # row j is s_full[n_valid + j] (validity is a prefix, so the
         # tail stays contiguous for every ragged vlen).  Static-W loop
@@ -143,14 +280,22 @@ def ensemble_scan_kernel(x_ref, vlen_ref, k0_ref, m_ref, thr_ref, sel_ref,
                                  keepdims=True))
             new_s2.append(jnp.sum(jnp.where(hit, s2_full, 0.0), axis=0,
                                   keepdims=True))
-        tail_s[...] = jnp.concatenate(new_s, axis=0)
-        tail_s2[...] = jnp.concatenate(new_s2, axis=0)
-    else:
-        tail_s[w - 1:w, :] = s[block_t - 1:block_t]
+        state[0:w, :] = jnp.concatenate(new_s, axis=0)
+        state[w:2 * w, :] = jnp.concatenate(new_s2, axis=0)
+    elif moment:
+        state[w - 1:w, :] = s[block_t - 1:block_t]
         if need_s2:
-            tail_s2[w - 1:w, :] = s2[block_t - 1:block_t]
+            state[2 * w - 1:2 * w, :] = s2[block_t - 1:block_t]
 
-    # ---- selection-masked bitmask + weighted vote ----------------------
+    # ---- opaque-region members: per-member state-advance dispatch -----
+    if "hst" in detectors:
+        flags["hst"], scores["hst"] = _hst_lane(state, spec, x, valid, m,
+                                                window=window)
+    if "teda-q" in detectors:
+        flags["teda-q"], scores["teda-q"] = _teda_q_lane(
+            state, spec, x, valid, k, m, fmt)
+
+    # ---- selection-masked bitmask + weighted vote + score streams -----
     bits = jnp.zeros((bt, c), jnp.int32)
     votew = jnp.zeros((bt, c), jnp.float32)
     totw = jnp.zeros((1, c), jnp.float32)
@@ -160,6 +305,7 @@ def ensemble_scan_kernel(x_ref, vlen_ref, k0_ref, m_ref, thr_ref, sel_ref,
         bits = bits + f.astype(jnp.int32) * (1 << d)
         votew = votew + f.astype(jnp.float32) * wrow
         totw = totw + wrow
+        score_refs[d][...] = jnp.where(valid, scores[name], 0.0)
     vote = (votew >= thr) & (totw > 0.0) & valid
     bits_ref[...] = bits
     vote_ref[...] = vote.astype(jnp.int8)
@@ -169,9 +315,7 @@ def ensemble_scan_kernel(x_ref, vlen_ref, k0_ref, m_ref, thr_ref, sel_ref,
     @pl.when(i == pl.num_programs(1) - 1)
     def _fin():
         fk_ref[...] = k0 + vlen  # vlen pre-clamped to [0, T] by wrapper
-        aux_out_ref[0:w, :] = tail_s[...]
-        aux_out_ref[w:2 * w, :] = tail_s2[...]
-        aux_out_ref[2 * w:2 * w + 1, :] = var_c[...]
+        aux_out_ref[...] = state[...]
 
 
 def ensemble_pallas_call(x: jnp.ndarray, vlen: jnp.ndarray,
@@ -179,25 +323,31 @@ def ensemble_pallas_call(x: jnp.ndarray, vlen: jnp.ndarray,
                          thr: jnp.ndarray, sel: jnp.ndarray,
                          aux: jnp.ndarray, *, block_t: int,
                          block_c: int = 0, window: int,
-                         detectors: tuple, interpret: bool,
+                         detectors: tuple, fmt=None, interpret: bool,
                          donate: bool = True):
     """Raw pallas_call.  x (T, C) pre-padded; vlen / k0 / m / thr are
     (1, C) per-channel carry rows; sel is the (K, C) selection-weight
-    block; aux the (2*window + 1, C) shared-state block.  `detectors`
-    is the static ensemble tuple — bit d of the emitted mask is
-    detectors[d].  Returns (det_bits, vote, fk, aux_final).  With
-    `donate`, k0 aliases fk and aux aliases aux_final — callers must
-    treat those operands as consumed.
+    block; aux the (spec.rows, C) packed state block of
+    `ensemble_spec(detectors, window)`.  `detectors` is the static
+    ensemble tuple — bit d of the emitted mask is detectors[d]; `fmt`
+    is the QFormat of the "teda-q" member (required iff present).
+    Returns (det_bits, vote, fk, aux_final, score_0, ..., score_{K-1})
+    with one (T, C) f32 score stream per detector.  With `donate`, k0
+    aliases fk and aux aliases aux_final — callers must treat those
+    operands as consumed.
     """
     t_len, c = x.shape
     if not block_c:
         block_c = c
-    n_aux = 2 * window + 1
+    spec = ensemble_spec(detectors, window)
+    n_aux = spec.rows
     assert (t_len % block_t == 0 and block_t % 8 == 0
             and c % block_c == 0 and block_c % 128 == 0), (
         "wrapper must pad: T % block_t == 0, block_t % 8 == 0, "
         "C % block_c == 0, block_c % 128 == 0")
     assert aux.shape == (n_aux, c) and sel.shape == (len(detectors), c)
+    if "teda-q" in detectors and fmt is None:
+        raise ValueError("the teda-q member needs fmt=QFormat(...)")
     grid = (c // block_c, t_len // block_t)
 
     row_spec = block_spec((block_t, block_c), lambda j, i: (i, j),
@@ -214,15 +364,18 @@ def ensemble_pallas_call(x: jnp.ndarray, vlen: jnp.ndarray,
         jax.ShapeDtypeStruct((t_len, c), jnp.int8),   # fused vote
         jax.ShapeDtypeStruct((1, c), f32),            # final k
         jax.ShapeDtypeStruct((n_aux, c), f32),        # final aux block
-    ]
-    out_specs = [row_spec, row_spec, carry_spec, aux_spec]
+    ] + [jax.ShapeDtypeStruct((t_len, c), f32)        # per-member score
+         for _ in detectors]
+    out_specs = [row_spec, row_spec, carry_spec, aux_spec] + \
+                [row_spec for _ in detectors]
     aliases = {}
     if donate:
         # k0 -> fk, aux -> final aux (inputs 2 / 6); vlen, m, thr and
         # sel are read by every grid step — never donated
         aliases = {2: 2, 6: 3}
     kernel = functools.partial(ensemble_scan_kernel, block_t=block_t,
-                               window=window, detectors=tuple(detectors))
+                               window=window, detectors=tuple(detectors),
+                               fmt=fmt)
     compiler_params = None
     if not interpret:
         compiler_params = tpu_compiler_params(
@@ -235,9 +388,7 @@ def ensemble_pallas_call(x: jnp.ndarray, vlen: jnp.ndarray,
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=[
-            pltpu.VMEM((window, block_c), f32),  # S prefix tail
-            pltpu.VMEM((window, block_c), f32),  # S2 prefix tail
-            pltpu.VMEM((1, block_c), f32),       # TEDA variance carry
+            pltpu.VMEM((n_aux, block_c), f32),  # the packed StateSpec
         ],
         input_output_aliases=aliases,
         compiler_params=compiler_params,

@@ -47,28 +47,22 @@ import jax.numpy as jnp
 from repro.core.teda import TedaState
 from repro.fixedpoint.qformat import QFormat, div_qi
 from repro.fixedpoint.teda_q import msq1_const
+from repro.kernels.ragged import (default_interpret, mask_ragged_rows,
+                                  norm_block_c, pad_layout, round_up,
+                                  vlen_vec)
 from repro.kernels.teda_scan import teda_pallas_call
 from repro.kernels.teda_q_scan import teda_q_pallas_call
 
 __all__ = ["teda_scan_tpu", "teda_scan_verdict", "teda_q_scan_tpu",
            "teda_q_scan_verdict", "default_interpret", "state_vectors"]
 
-
-def default_interpret() -> bool:
-    """Interpret (CPU emulation) unless a real TPU backend is attached."""
-    return jax.default_backend() != "tpu"
-
-
-def _round_up(v: int, mult: int) -> int:
-    return -(-v // mult) * mult
-
-
-def _norm_block_c(block_c) -> int:
-    """Normalize the channel-block width to a static int (0 = one strip)."""
-    bc = int(block_c or 0)
-    if bc and bc % 128 != 0:
-        raise ValueError(f"block_c must be a multiple of 128, got {bc}")
-    return bc
+# the helpers moved to `kernels/ragged.py` (shared with the ensemble
+# wrapper); the underscore aliases remain for existing importers
+_round_up = round_up
+_norm_block_c = norm_block_c
+_vlen_vec = vlen_vec
+_mask_ragged_rows = mask_ragged_rows
+_pad_layout = pad_layout
 
 
 def state_vectors(state: Optional[TedaState], c: int, dtype
@@ -95,51 +89,6 @@ def state_vectors(state: Optional[TedaState], c: int, dtype
 def _k_rows(k0, t_len, dtype):
     """Global iteration index of every row: k0 + 1 .. k0 + T, (T, C)."""
     return k0[None, :] + jnp.arange(1, t_len + 1, dtype=dtype)[:, None]
-
-
-def _vlen_vec(valid_lens, t_len: int, c: int, dtype):
-    """Normalize `valid_lens` to a per-channel (C,) vector.
-
-    Returns (vlen, ragged): `ragged` is the *static* flag that the
-    caller asked for a valid-length restriction at all (None means the
-    whole chunk is valid for every channel — the uniform fast case that
-    skips the ragged verdict masking).  Values are clamped to [0, T]:
-    the kernels freeze each carry at the padded time extent, so an
-    unclamped vlen would make the returned k disagree with the state
-    the carries actually hold (and traced callers skip the engine's
-    host-side bounds check).
-    """
-    if valid_lens is None:
-        return jnp.full((c,), t_len, dtype), False
-    vl = jnp.clip(jnp.asarray(valid_lens, dtype), 0, t_len)
-    vl = vl.reshape(-1) if vl.ndim else vl
-    return jnp.broadcast_to(vl, (c,)), True
-
-
-def _mask_ragged_rows(outlier, vlen, t_len: int):
-    """No verdicts beyond a channel's valid length (eq (6) gate)."""
-    rows = jnp.arange(t_len, dtype=vlen.dtype)[:, None]
-    return jnp.logical_and(outlier, rows < vlen[None, :])
-
-
-def _pad_layout(x, rows, block_t, lane_pad, block_c=0):
-    """Shared kernel-layout padding: time to block_t, lanes to lane_pad
-    and (when channel-blocking) to a block_c multiple.
-
-    `rows` are per-channel (C,) carry vectors, returned as padded (1, C')
-    rows.  Returns (padded x, padded rows, un-pad slice).  Every wrapper
-    routes through this so the layout contract has one definition; the
-    valid length is passed to the kernel, which masks the padded tail.
-    """
-    t_len, c = x.shape
-    tp = _round_up(max(t_len, block_t), block_t)
-    cp = _round_up(c, lane_pad)
-    if block_c:
-        cp = _round_up(cp, block_c)
-    xp = jnp.pad(x, ((0, tp - t_len), (0, cp - c)))
-    rp = tuple(jnp.pad(r.reshape(1, c), ((0, 0), (0, cp - c)))
-               for r in rows)
-    return xp, rp, (slice(0, t_len), slice(0, c))
 
 
 @functools.partial(jax.jit,

@@ -1,0 +1,79 @@
+"""Shared ragged-stream + kernel-layout helpers.
+
+One definition of the contract every Pallas wrapper speaks: per-channel
+valid-length normalization (`vlen_vec`), post-kernel verdict masking of
+ragged tails (`mask_ragged_rows`), and the lane/sublane layout padding
+(`pad_layout`, `norm_block_c`, `round_up`).  `kernels/ops.py` (the TEDA
+wrappers) and `detectors/ensemble.py` (the fused ensemble wrapper) both
+consume these — previously each carried its own copy, and a semantics
+fix in one could silently miss the other.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["default_interpret", "round_up", "norm_block_c", "vlen_vec",
+           "mask_ragged_rows", "pad_layout"]
+
+
+def default_interpret() -> bool:
+    """Interpret (CPU emulation) unless a real TPU backend is attached."""
+    return jax.default_backend() != "tpu"
+
+
+def round_up(v: int, mult: int) -> int:
+    return -(-v // mult) * mult
+
+
+def norm_block_c(block_c) -> int:
+    """Normalize the channel-block width to a static int (0 = one strip)."""
+    bc = int(block_c or 0)
+    if bc and bc % 128 != 0:
+        raise ValueError(f"block_c must be a multiple of 128, got {bc}")
+    return bc
+
+
+def vlen_vec(valid_lens, t_len: int, c: int, dtype):
+    """Normalize `valid_lens` to a per-channel (C,) vector.
+
+    Returns (vlen, ragged): `ragged` is the *static* flag that the
+    caller asked for a valid-length restriction at all (None means the
+    whole chunk is valid for every channel — the uniform fast case that
+    skips the ragged verdict masking).  Values are clamped to [0, T]:
+    the kernels freeze each carry at the padded time extent, so an
+    unclamped vlen would make the returned k disagree with the state
+    the carries actually hold (and traced callers skip the engine's
+    host-side bounds check).
+    """
+    if valid_lens is None:
+        return jnp.full((c,), t_len, dtype), False
+    vl = jnp.clip(jnp.asarray(valid_lens, dtype), 0, t_len)
+    vl = vl.reshape(-1) if vl.ndim else vl
+    return jnp.broadcast_to(vl, (c,)), True
+
+
+def mask_ragged_rows(outlier, vlen, t_len: int):
+    """No verdicts beyond a channel's valid length (eq (6) gate)."""
+    rows = jnp.arange(t_len, dtype=vlen.dtype)[:, None]
+    return jnp.logical_and(outlier, rows < vlen[None, :])
+
+
+def pad_layout(x, rows, block_t, lane_pad, block_c=0):
+    """Shared kernel-layout padding: time to block_t, lanes to lane_pad
+    and (when channel-blocking) to a block_c multiple.
+
+    `rows` are per-channel (C,) carry vectors, returned as padded (1, C')
+    rows.  Returns (padded x, padded rows, un-pad slice).  Every wrapper
+    routes through this so the layout contract has one definition; the
+    valid length is passed to the kernel, which masks the padded tail.
+    """
+    t_len, c = x.shape
+    tp = round_up(max(t_len, block_t), block_t)
+    cp = round_up(c, lane_pad)
+    if block_c:
+        cp = round_up(cp, block_c)
+    xp = jnp.pad(x, ((0, tp - t_len), (0, cp - c)))
+    rp = tuple(jnp.pad(r.reshape(1, c), ((0, 0), (0, cp - c)))
+               for r in rows)
+    return xp, rp, (slice(0, t_len), slice(0, c))

@@ -157,6 +157,10 @@ class RequestStats:
     # ensemble backend only: per-detector flag counts ({name: count},
     # selection-masked — an unselected detector never appears)
     det_flags: Dict[str, int] = field(default_factory=dict)
+    # ensemble backend only: per-detector score-stream sums over every
+    # retired sample ({name: float} — the kernel's float score streams,
+    # NOT selection-gated; divide by `samples` for the running mean)
+    det_scores: Dict[str, float] = field(default_factory=dict)
 
     @property
     def queue_wait_ticks(self) -> Optional[int]:
@@ -712,6 +716,11 @@ class BatchingScheduler:
         else:
             outlier = np.asarray(inf.out["outlier"])
             ecc = np.asarray(inf.out["ecc"]) if want_ecc else None
+        # the ensemble's per-detector (K, T, C) float score streams
+        # ride the same fetch — per-request sums feed RequestStats /
+        # chunk_retired telemetry
+        scores = (np.asarray(inf.out["scores"])
+                  if self._ensemble and "scores" in inf.out else None)
         wall = (inf.sync_wall if inf.sync_wall is not None
                 else time.perf_counter() - inf.t0)
         retired = int(sum(n for _, _, n in inf.members))
@@ -739,6 +748,7 @@ class BatchingScheduler:
                 flagged.append(run.req.rid)
                 self._c_flags.inc(nf)
             det_counts = None
+            det_sums = None
             if self._ensemble:
                 # bit d of the "ecc" bitmask column is detectors[d]
                 col_bits = ecc[:n, slot].astype(np.int64)
@@ -749,6 +759,15 @@ class BatchingScheduler:
                         det_counts[det] = c
                         self._det_counter(det).inc(c)
                         st.det_flags[det] = st.det_flags.get(det, 0) + c
+                if scores is not None and n:
+                    # row d of the score block is detectors[d]'s float
+                    # score stream over this slot's retired prefix
+                    det_sums = {}
+                    for d, det in enumerate(self._det_names):
+                        s = float(scores[d, :n, slot].sum())
+                        det_sums[det] = s
+                        st.det_scores[det] = (
+                            st.det_scores.get(det, 0.0) + s)
             if n > 1:
                 st.prefill_chunks += 1  # a multi-sample (chunked) ride
             else:
@@ -767,6 +786,8 @@ class BatchingScheduler:
                 if det_counts is not None:
                     data["det_flags"] = det_counts
                     data["detectors"] = self._det_names
+                if det_sums is not None:
+                    data["det_scores"] = det_sums
                 self.events.publish("chunk_retired", self.tick_no,
                                     run.req.rid, **data)
             run.inflight -= 1

@@ -173,7 +173,12 @@ def serve_streams(streams: Sequence[tuple],
               "decode_steps": st.decode_steps, "slot": st.slot,
               "shard": st.shard, "migrations": st.migrations,
               "priority": st.priority,
-              "det_flags": dict(st.det_flags)}
+              "det_flags": dict(st.det_flags),
+              # ensemble backend only: per-detector mean score over the
+              # request's retired samples (the kernel's float score
+              # streams, threaded engine -> pool -> scheduler events)
+              "det_scores": {d: s / max(st.samples, 1)
+                             for d, s in st.det_scores.items()}}
         for rid, st in ((rid, sched.telemetry(rid)) for rid in recs)}
     return {
         "backend": backend, "chunk_t": chunk_t,
